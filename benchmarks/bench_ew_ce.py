@@ -1,0 +1,62 @@
+"""Beyond-paper transfer: the paper's EW-MSE idea applied to LM training.
+
+EW-MSE up-weights far-horizon forecast errors (§3.3.2).  The LM analogue
+(`core.losses.weighted_ce`, β>1) up-weights late context positions — the
+"long-range" targets of next-token prediction.  This bench trains a reduced
+qwen-family decoder on the structured Zipf stream with β ∈ {1, 2} and
+reports the per-position-quartile eval loss: β>1 shifts capacity toward
+late positions exactly as EW-MSE shifts it toward far horizons.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.data import tokens
+from repro.models import transformer as tf
+
+
+def run(beta: float, steps: int = 40, seed: int = 0):
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = tf.init_model(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32)
+    opt = optim.adam()
+    step = jax.jit(tf.make_train_step(cfg, opt, beta=beta,
+                                      dtype=jnp.float32))
+    st = opt.init(params)
+    for i in range(steps):
+        b = tokens.make_lm_batch(cfg, 8, 128, seed=1000 + i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, st, m = step(params, st, batch, 3e-3)
+    # eval: per-position CE on held-out stream
+    b = tokens.make_lm_batch(cfg, 16, 128, seed=9_999)
+    logits, _, _ = tf.forward(params, {"tokens": jnp.asarray(b["tokens"])},
+                              cfg, dtype=jnp.float32, remat=False)
+    logp = jax.nn.log_softmax(logits, -1)
+    ll = jnp.take_along_axis(logp, jnp.asarray(b["labels"])[..., None],
+                             -1)[..., 0]
+    per_pos = -np.asarray(ll).mean(0)                    # (S,)
+    quart = per_pos.reshape(4, -1).mean(1)
+    return float(m["loss"]), quart
+
+
+def main():
+    rows = []
+    print("# EW loss transferred to LM training (reduced qwen, 40 steps)")
+    print("beta,final_train_loss,eval_ce_q1,eval_ce_q2,eval_ce_q3,eval_ce_q4")
+    for beta in (1.0, 2.0):
+        loss, quart = run(beta)
+        print(f"{beta},{loss:.3f}," + ",".join(f"{q:.3f}" for q in quart))
+        rows.append((beta, quart))
+    d_late = rows[0][1][3] - rows[1][1][3]
+    d_early = rows[0][1][0] - rows[1][1][0]
+    print(f"# β=2 improves late-position CE by {d_late:+.3f} vs β=1 "
+          f"(early-position delta {d_early:+.3f}) — the paper's far-horizon "
+          "emphasis, transferred")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

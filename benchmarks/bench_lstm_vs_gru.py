@@ -1,0 +1,28 @@
+"""Paper Fig. 4 — LSTM vs GRU × MSE/EW-MSE × 3 states (held-out accuracy)."""
+from __future__ import annotations
+
+from benchmarks._common import run_fl
+
+
+def main():
+    rows = []
+    print("# Fig. 4 reproduction — avg held-out accuracy")
+    print("state,cell,loss,accuracy_pct,rmse")
+    for state in ("CA", "FLO", "RI"):
+        for cell in ("lstm", "gru"):
+            for loss in ("mse", "ew_mse"):
+                r = run_fl(state=state, cell=cell, loss=loss)
+                m = r["metrics"]
+                print(f"{state},{cell},{loss},{m['accuracy']:.2f},"
+                      f"{m['rmse']:.3f}")
+                rows.append((state, cell, loss, m["accuracy"]))
+    for state in ("CA", "FLO", "RI"):
+        g = {(c, l): a for s, c, l, a in rows if s == state}
+        print(f"# {state}: LSTM EW-MSE gain {g[('lstm','ew_mse')]-g[('lstm','mse')]:+.2f} pp, "
+              f"GRU EW-MSE gain {g[('gru','ew_mse')]-g[('gru','mse')]:+.2f} pp "
+              "(paper: LSTM benefits more from EW-MSE)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Roofline reader — renders EXPERIMENTS.md §Roofline from the dry-run
+artifacts in experiments/dryrun/ (run `python -m repro.launch.dryrun --all`
+first; see MULTI-POD DRY-RUN in the README)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.launch import roofline
+
+
+def main(dir_=None):
+    if dir_ is None:
+        dir_ = ("experiments/dryrun_optimized"
+                if Path("experiments/dryrun_optimized").exists()
+                else "experiments/dryrun")
+    if not Path(dir_).exists() or not list(Path(dir_).glob("*.json")):
+        print("# no dry-run artifacts found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return []
+    recs = roofline.load_records(dir_)
+    print(f"# roofline terms from {len(recs)} dry-run artifacts "
+          "(TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)")
+    print(roofline.table(recs))
+    doms = {}
+    for r in recs:
+        t = roofline.terms(r)
+        doms[t["dominant"]] = doms.get(t["dominant"], 0) + 1
+    print(f"# dominant-term histogram: {doms}")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark runner — one section per paper table/figure + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Sections:
+  clustering   Tables 2 & 3 (K-means clustering vs global vs SARIMA)
+  ewmse        Table 4 + Fig. 3 (MSE vs EW-MSE per horizon × state)
+  lstm_vs_gru  Fig. 4 (architecture × loss × state)
+  beta         Fig. 5 (EW-MSE β ablation)
+  scalability  §5.4 (generalization to large unseen populations)
+  edge         §5.5 (edge-cluster envelope, simulated)
+  kernels      Pallas kernels vs references
+  roofline     §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (bench_beta, bench_clustering, bench_edge,
+                        bench_ew_ce, bench_ewmse, bench_kernels,
+                        bench_lstm_vs_gru, bench_roofline,
+                        bench_scalability)
+
+SECTIONS = [
+    ("kernels", bench_kernels.main),
+    ("roofline", bench_roofline.main),
+    ("edge", bench_edge.main),
+    ("clustering", bench_clustering.main),
+    ("ewmse", bench_ewmse.main),
+    ("ew_ce_transfer", bench_ew_ce.main),
+    ("lstm_vs_gru", bench_lstm_vs_gru.main),
+    ("beta", bench_beta.main),
+    ("scalability", bench_scalability.main),
+]
+
+
+def main() -> None:
+    import os
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    from benchmarks._common import scale
+    print(f"bench scale = {os.environ.get('REPRO_BENCH_SCALE', 'default')} "
+          f"{scale()}  (REPRO_BENCH_SCALE=fast|default|paper)")
+    failures = []
+    for name, fn in SECTIONS:
+        if args.only and name != args.only:
+            continue
+        print(f"\n{'='*72}\n== bench: {name}\n{'='*72}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"== {name} done in {time.time()-t0:.0f}s")
+        except Exception:                                # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == '__main__':
+    main()

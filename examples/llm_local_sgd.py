@@ -1,0 +1,80 @@
+"""The paper's FedAvg schedule as a cross-pod LLM training strategy.
+
+Runs a REDUCED qwen-family decoder on a simulated 2-pod mesh (8 fake CPU
+devices: pod=2 × data=2 × model=2) with DiLoCo-style local-SGD: H inner
+steps per pod with no cross-pod sync, then one FedAvg parameter average
+across pods.  Loss decreases and the two pod replicas re-converge at every
+sync — FedAvg ≡ local SGD with an H-step communication period (DESIGN.md §2).
+
+  PYTHONPATH=src python examples/llm_local_sgd.py
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from repro import optim                                 # noqa: E402
+from repro.configs import get_config                    # noqa: E402
+from repro.models import transformer as tf              # noqa: E402
+from repro.sharding import ShardingRules, use_rules     # noqa: E402
+
+H = 4                # inner steps between cross-pod syncs
+ROUNDS = 3
+B, S = 8, 64
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+rules = ShardingRules(mesh, fsdp_axis="data", tensor_axis="model",
+                      data_axes=("data",), pod_axis=None)
+
+cfg = get_config("qwen1.5-0.5b").reduced()
+params = tf.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+opt = optim.adam()
+step = tf.make_train_step(cfg, opt, dtype=jnp.float32)
+
+# per-pod replicas: leading pod axis
+n_pod = 2
+pod = lambda t: jnp.broadcast_to(t, (n_pod,) + t.shape).copy()
+params_p = jax.tree.map(pod, params)
+opt_p = jax.tree.map(pod, opt.init(params))
+
+
+def local_sgd_round(params_p, opt_p, batches, lr):
+    """H inner steps per pod (vmapped), then FedAvg across pods."""
+    def pod_train(p, o, bs):
+        def body(carry, b):
+            p, o = carry
+            with use_rules(rules):
+                p, o, m = step(p, o, b, lr)
+            return (p, o), m["loss"]
+        (p, o), losses = jax.lax.scan(body, (p, o), bs)
+        return p, o, losses
+    p2, o2, losses = jax.vmap(pod_train, spmd_axis_name="pod")(
+        params_p, opt_p, batches)
+    drift = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda t: jnp.abs(t[0] - t[1]).sum().astype(jnp.float32),
+                     p2))
+    synced = jax.tree.map(
+        lambda t: jnp.broadcast_to(jnp.mean(t, 0, keepdims=True), t.shape),
+        p2)
+    return synced, o2, losses, drift
+
+
+rng = np.random.default_rng(0)
+run = jax.jit(local_sgd_round)
+with mesh:
+    for r in range(ROUNDS):
+        toks = rng.integers(0, cfg.vocab_size, (n_pod, H, B, S))
+        batches = {"tokens": jnp.asarray(toks, jnp.int32),
+                   "labels": jnp.asarray(toks, jnp.int32)}
+        params_p, opt_p, losses, drift = run(params_p, opt_p, batches,
+                                             jnp.float32(3e-3))
+        l = np.asarray(losses)
+        print(f"round {r}: pod0 losses {np.round(l[0], 3)}  "
+              f"pod1 losses {np.round(l[1], 3)}  "
+              f"pre-sync param drift {float(drift):.3f}")
+print("pods trained independently for H steps, then FedAvg re-synced them —"
+      "\ncross-pod traffic is 1/H of per-step synchronization.")

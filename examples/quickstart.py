@@ -1,0 +1,38 @@
+"""Quickstart: federated demand forecasting in ~1 minute on CPU.
+
+Trains a global LSTM forecaster with FedAvg + EW-MSE over 12 synthetic
+California commercial buildings, then forecasts the next hour for an UNSEEN
+building (the paper's deployment story: no client-side retraining).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.base import FLConfig, ForecasterConfig
+from repro.core import fedavg
+from repro.data import synthetic, windows
+from repro.models import forecaster
+
+import jax.numpy as jnp
+
+# 1. a micro-grid of 12 buildings, 60 days of 15-min smart-meter data
+series = synthetic.generate_buildings("CA", list(range(12)), days=60)
+print(f"corpus: {series.shape[0]} buildings × {series.shape[1]} readings "
+      f"(mean {series.mean():.1f} kWh)")
+
+# 2. federated training: every client trains locally, server averages
+fcfg = ForecasterConfig(cell="lstm", hidden_dim=32)
+flcfg = FLConfig(n_clients=12, clients_per_round=12, rounds=20,
+                 loss="ew_mse", beta=2.0, n_clusters=0, lr=0.05)
+result = fedavg.run_federated_training(series, fcfg, flcfg, log_every=5)[-1]
+print(f"final train loss: {result.loss_history[-1]:.5f}")
+
+# 3. deploy to an unseen building
+unseen = synthetic.generate_buildings("CA", [99_999], days=60)[0]
+norm, (lo, hi) = windows.minmax_normalize(unseen)
+x = jnp.asarray(norm[-fcfg.lookback:][None, :, None])
+pred = np.asarray(forecaster.forecast(result.params, x, fcfg))[0]
+kwh = pred * max(hi - lo, 1e-9) + lo
+actual_recent = unseen[-4:]
+print(f"next-hour forecast (kWh/15min): {np.round(kwh, 2)}")
+print(f"(building's recent hour was:    {np.round(actual_recent, 2)})")

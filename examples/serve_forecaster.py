@@ -1,0 +1,15 @@
+"""Batched-request serving demo (deliverable b, serving kind).
+
+Fits a small FL model, then serves batched next-hour forecast requests for
+hundreds of unseen consumers — the micro-grid provider's inference path
+(paper §5.4: deploy to clients with no compute for training).
+
+  PYTHONPATH=src python examples/serve_forecaster.py
+"""
+from repro.launch import serve
+
+if __name__ == "__main__":
+    import sys
+    sys.argv = [sys.argv[0], "--train-clients", "16", "--rounds", "20",
+                "--requests", "256", "--days", "90"]
+    serve.main()

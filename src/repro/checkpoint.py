@@ -1,0 +1,70 @@
+"""Checkpointing: save/restore parameter + optimizer pytrees.
+
+Flat-key .npz format (no pickle — safe to load), with the tree structure
+recorded as the key paths.  Used by the FL driver for round snapshots and
+by the LLM examples.  bfloat16 leaves are stored via a uint16 view (npz has
+no native bf16).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+_BF16_TAG = "__bf16__"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[key + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def save(path, tree, metadata=None):
+    """Write a pytree checkpoint to ``path`` (.npz)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    if metadata is not None:
+        flat["__metadata__"] = np.frombuffer(
+            json.dumps(metadata).encode(), dtype=np.uint8)
+    np.savez(path, **flat)
+
+
+def restore(path, like):
+    """Load a checkpoint into the structure of ``like`` (a template tree)."""
+    data = np.load(Path(path), allow_pickle=False)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = []
+    for kp, leaf in flat_like:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if key + _BF16_TAG in data:
+            arr = jnp.asarray(data[key + _BF16_TAG]).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(data[key])
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def metadata(path):
+    data = np.load(Path(path), allow_pickle=False)
+    if "__metadata__" in data:
+        return json.loads(bytes(data["__metadata__"]).decode())
+    return None

@@ -1,0 +1,32 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES = {
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,17 @@
+"""The paper's contribution: FedAvg with clustering + EW-MSE, and its
+generalization to cross-pod local-SGD training."""
+from repro.core import clustering, fedavg, local_sgd, losses, sarima
+from repro.core.fedavg import (FLResult, evaluate_global, fedavg_aggregate,
+                               fedavg_round, make_sharded_round,
+                               run_federated_training)
+from repro.core.local_sgd import (LocalSGDConfig, OuterState, fedavg_outer,
+                                  init_outer_state, outer_step)
+from repro.core.losses import (accuracy, ew_mse, make_loss, mape, mse,
+                               per_horizon_accuracy, rmse, weighted_ce)
+
+__all__ = ["clustering", "fedavg", "local_sgd", "losses", "sarima",
+           "FLResult", "evaluate_global", "fedavg_aggregate", "fedavg_round",
+           "make_sharded_round", "run_federated_training", "LocalSGDConfig",
+           "OuterState", "fedavg_outer", "init_outer_state", "outer_step",
+           "accuracy", "ew_mse", "make_loss", "mape", "mse",
+           "per_horizon_accuracy", "rmse", "weighted_ce"]

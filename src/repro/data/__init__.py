@@ -1,0 +1,8 @@
+from repro.data.synthetic import STATES, generate_buildings, mean_consumption
+from repro.data.windows import (client_dataset, daily_average_vector,
+                                make_windows, minmax_normalize, train_test_split)
+from repro.data.partition import sample_clients
+
+__all__ = ["STATES", "generate_buildings", "mean_consumption", "client_dataset",
+           "daily_average_vector", "make_windows", "minmax_normalize",
+           "train_test_split", "sample_clients"]

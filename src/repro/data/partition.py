@@ -1,0 +1,33 @@
+"""Client partitioning + per-round sampling (paper Alg. 1)."""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+
+def sample_clients(rng: np.random.Generator, n_clients: int, m: int) -> np.ndarray:
+    """Server randomly selects M clients out of N (without replacement)."""
+    m = min(m, n_clients)
+    return rng.choice(n_clients, size=m, replace=False)
+
+
+def cluster_partition(assignments: np.ndarray) -> Dict[int, np.ndarray]:
+    """cluster id -> client indices."""
+    return {int(c): np.flatnonzero(assignments == c)
+            for c in np.unique(assignments)}
+
+
+def sample_minibatch_indices(rng: np.random.Generator, n_windows: int,
+                             batch: int, steps: int) -> np.ndarray:
+    """(steps, batch) window indices for a client's local SGD schedule.
+
+    Emulates E epochs of shuffled minibatches with a fixed step count so the
+    local update is a fixed-shape ``lax.scan`` (vmap-able across clients).
+    """
+    return rng.integers(0, n_windows, size=(steps, batch))
+
+
+def local_steps(n_windows: int, batch: int, epochs: int) -> int:
+    """Number of SGD steps for E epochs of minibatch size B (Alg. 1 inner loop)."""
+    return max(1, (n_windows + batch - 1) // batch) * epochs

@@ -1,0 +1,101 @@
+"""Windowing + normalization (paper §4.2).
+
+Per building: Min–Max scale to [0,1] over the entire year, frame into
+look-back-8 / horizon-4 windows, split 75:25 chronologically (≈9 months train,
+3 months test).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import STEPS_PER_DAY
+
+
+def minmax_normalize(series: np.ndarray) -> Tuple[np.ndarray, Tuple]:
+    """series: (..., T). Returns normalized series + (min, max) for inversion."""
+    lo = series.min(axis=-1, keepdims=True)
+    hi = series.max(axis=-1, keepdims=True)
+    scale = np.maximum(hi - lo, 1e-9)
+    return (series - lo) / scale, (lo, hi)
+
+
+def denormalize(x: np.ndarray, stats: Tuple) -> np.ndarray:
+    lo, hi = stats
+    return x * np.maximum(hi - lo, 1e-9) + lo
+
+
+def make_windows(series: np.ndarray, lookback: int, horizon: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """series: (T,) -> x: (n, lookback, 1), y: (n, horizon)."""
+    T = series.shape[-1]
+    n = T - lookback - horizon + 1
+    idx = np.arange(lookback)[None, :] + np.arange(n)[:, None]
+    x = series[idx][..., None].astype(np.float32)
+    yidx = lookback + np.arange(horizon)[None, :] + np.arange(n)[:, None]
+    y = series[yidx].astype(np.float32)
+    return x, y
+
+
+def train_test_split(series: np.ndarray, frac: float = 0.75):
+    """Chronological split of a (T,) series."""
+    cut = int(series.shape[-1] * frac)
+    return series[..., :cut], series[..., cut:]
+
+
+def daily_average_vector(series: np.ndarray, days: int = 273) -> np.ndarray:
+    """Privacy-coarsened consumption summary z_k (Alg. 1): daily means of the
+    *training* period.  series: (..., T) -> (..., days)."""
+    t = days * STEPS_PER_DAY
+    s = series[..., :t]
+    return s.reshape(*s.shape[:-1], days, STEPS_PER_DAY).mean(axis=-1)
+
+
+def client_dataset(series: np.ndarray, lookback: int, horizon: int,
+                   train_frac: float = 0.75) -> Dict[str, np.ndarray]:
+    """Full per-client pipeline: normalize -> split -> window.
+
+    series: (T,) raw kWh. Returns dict with train/test windows (normalized)
+    plus the min/max stats for de-normalization.
+    """
+    norm, stats = minmax_normalize(series)
+    tr, te = train_test_split(norm, train_frac)
+    x_tr, y_tr = make_windows(tr, lookback, horizon)
+    x_te, y_te = make_windows(te, lookback, horizon)
+    return {"x_train": x_tr, "y_train": y_tr, "x_test": x_te, "y_test": y_te,
+            "stats": stats}
+
+
+def batched_client_windows(all_series: np.ndarray, lookback: int, horizon: int,
+                           train_frac: float = 0.75):
+    """Vectorized pipeline over clients: (N, T) -> stacked train/test windows
+    of shape (N, n_windows, ...), suitable for vmap/shard_map over axis 0."""
+    norm, stats = minmax_normalize(all_series)
+    cut = int(all_series.shape[-1] * train_frac)
+    tr, te = norm[:, :cut], norm[:, cut:]
+
+    def win(block):
+        xs, ys = [], []
+        for row in block:
+            x, y = make_windows(row, lookback, horizon)
+            xs.append(x)
+            ys.append(y)
+        return np.stack(xs), np.stack(ys)
+
+    x_tr, y_tr = win(tr)
+    x_te, y_te = win(te)
+    return {"x_train": x_tr, "y_train": y_tr, "x_test": x_te, "y_test": y_te,
+            "stats": stats}
+
+
+def flatten_test_windows(data):
+    """(N, n_win, ...) stacked test windows -> flat (N*n_win, ...) plus the
+    per-row (lo, hi) stats for kWh-space metric computation."""
+    x = data["x_test"]
+    n, n_win = x.shape[:2]
+    lo, hi = data["stats"]
+    rep = lambda a: np.repeat(a, n_win, axis=0)
+    return (x.reshape(n * n_win, *x.shape[2:]),
+            data["y_test"].reshape(n * n_win, -1),
+            (rep(lo), rep(hi)))

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compute hot-spots: fused LSTM/GRU cells (the
+paper's edge training inner loop) and flash attention (the assigned archs'
+prefill).  Validated in interpret mode on CPU against ref.py oracles."""
+from repro.kernels import ops, ref

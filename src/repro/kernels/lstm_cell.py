@@ -1,0 +1,86 @@
+"""Fused LSTM cell — Pallas TPU kernel.
+
+The paper's edge hot-spot is the recurrent cell (Pi clients spend 70–100 s
+per round in LSTM training).  On TPU the win is fusing BOTH matmuls and all
+four gate nonlinearities into one kernel so the (B, 4H) pre-activation never
+round-trips to HBM between the matmul and the gates: HBM traffic drops from
+3·(B·4H) intermediate reads/writes to just the final (h', c') writes.
+
+Tiling: grid (B/bt, H/ht).  Weights are laid out (I, 4, H) / (H, 4, H) so a
+hidden tile selects a contiguous H-slice of every gate; the gate axis (4) is
+resident in full.  The h·Wh matmul needs ALL of h, so the h block is (bt, H)
+— for forecaster-scale H (≤1024) this sits comfortably in VMEM, and both
+matmuls hit the MXU with K = I resp. H.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                 h_out_ref, c_out_ref):
+    x = x_ref[...]                                       # (bt, I)
+    h = h_ref[...]                                       # (bt, H)
+    c = c_ref[...]                                       # (bt, ht)
+    wx = wx_ref[...]                                     # (I, 4, ht)
+    wh = wh_ref[...]                                     # (H, 4, ht)
+    b = b_ref[...]                                       # (4, ht)
+
+    bt = x.shape[0]
+    ht = c.shape[-1]
+    zx = jax.lax.dot_general(x, wx.reshape(wx.shape[0], 4 * ht),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    zh = jax.lax.dot_general(h, wh.reshape(wh.shape[0], 4 * ht),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    z = (zx + zh).reshape(bt, 4, ht) + b[None].astype(jnp.float32)
+    i = jax.nn.sigmoid(z[:, 0])
+    f = jax.nn.sigmoid(z[:, 1])
+    g = jnp.tanh(z[:, 2])
+    o = jax.nn.sigmoid(z[:, 3])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h", "interpret"))
+def lstm_cell(x, h, c, wx, wh, b, *, block_b: int = 128, block_h: int = 128,
+              interpret: bool = True):
+    """Fused LSTM step.  x: (B, I); h, c: (B, H); wx: (I, 4H) [i|f|g|o];
+    wh: (H, 4H); b: (4H,).  Returns (h', c')."""
+    B, I = x.shape
+    H = h.shape[-1]
+    bt = min(block_b, B)
+    ht = min(block_h, H)
+    assert B % bt == 0 and H % ht == 0, (B, H, bt, ht)
+    wx3 = wx.reshape(I, 4, H)
+    wh3 = wh.reshape(H, 4, H)
+    b2 = b.reshape(4, H)
+
+    grid = (B // bt, H // ht)
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, I), lambda bi, hj: (bi, 0)),
+            pl.BlockSpec((bt, H), lambda bi, hj: (bi, 0)),
+            pl.BlockSpec((bt, ht), lambda bi, hj: (bi, hj)),
+            pl.BlockSpec((I, 4, ht), lambda bi, hj: (0, 0, hj)),
+            pl.BlockSpec((H, 4, ht), lambda bi, hj: (0, 0, hj)),
+            pl.BlockSpec((4, ht), lambda bi, hj: (0, hj)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, ht), lambda bi, hj: (bi, hj)),
+            pl.BlockSpec((bt, ht), lambda bi, hj: (bi, hj)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), h.dtype),
+            jax.ShapeDtypeStruct((B, H), c.dtype),
+        ],
+        interpret=interpret,
+    )(x, h, c, wx3, wh3, b2)

@@ -1,0 +1,55 @@
+"""Jit'd wrappers that route model code through the Pallas kernels.
+
+On CPU the kernels run in interpret mode (Python-level execution of the
+kernel body) — correctness only.  On TPU set ``REPRO_PALLAS_COMPILE=1`` (or
+call with interpret=False) to lower them for real.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gru_cell as _gru
+from repro.kernels import lstm_cell as _lstm
+
+_INTERPRET = (jax.default_backend() == "cpu"
+              and not os.environ.get("REPRO_PALLAS_COMPILE"))
+
+
+def lstm_cell_fused(x_t, h, c, p, *, block_b=None, block_h=None):
+    """Drop-in for models.forecaster.lstm_cell: (x_t, h, c, params) -> (h', c').
+
+    Note the forecaster stores gates [i|f|g|o] in wx/wh — same layout the
+    kernel expects.  Pads the batch to the block size when needed.
+    """
+    B, H = h.shape
+    bb = block_b or _pick_block(B)
+    bh = block_h or _pick_block(H)
+    return _lstm.lstm_cell(x_t, h, c, p["wx"], p["wh"], p["b"],
+                           block_b=bb, block_h=bh, interpret=_INTERPRET)
+
+
+def gru_cell_fused(x_t, h, p, *, block_b=None, block_h=None):
+    """Drop-in for models.forecaster.gru_cell: (x_t, h, params) -> h'."""
+    B, H = h.shape
+    bb = block_b or _pick_block(B)
+    bh = block_h or _pick_block(H)
+    return _gru.gru_cell(x_t, h, p["wx"], p["wh"], p["b"],
+                         block_b=bb, block_h=bh, interpret=_INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    block_q=128, block_k=128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=_INTERPRET)
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is ≤ target."""
+    for b in range(min(n, target), 0, -1):
+        if n % b == 0:
+            return b
+    return 1

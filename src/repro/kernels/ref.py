@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """x: (B, I); h, c: (B, H); wx: (I, 4H) [i|f|g|o]; wh: (H, 4H); b: (4H,)."""
+    z = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def gru_cell_ref(x, h, wx, wh, b):
+    """x: (B, I); h: (B, H); wx: (I, 3H) [z|r|h̃]; wh: (H, 3H); b: (3H,)."""
+    H = h.shape[-1]
+    zx = x @ wx + b
+    zh = h @ wh
+    z = jax.nn.sigmoid(zx[..., :H] + zh[..., :H])
+    r = jax.nn.sigmoid(zx[..., H:2 * H] + zh[..., H:2 * H])
+    h_tilde = jnp.tanh(zx[..., 2 * H:] + r * zh[..., 2 * H:])
+    return z * h + (1.0 - z) * h_tilde
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B, S, H, hd); k, v: (B, S, Hkv, hd). GQA via head grouping.
+
+    Returns (B, S, H, hd). Plain materialized-scores oracle.
+    """
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, S, Hkv, G, hd)
+    s = jnp.einsum("bskgh,btkh->bskgt", qg, k).astype(jnp.float32) * scale
+    if causal:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = j <= i
+        if window:
+            mask &= j > i - window
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkh->bskgh", w.astype(v.dtype), v)
+    return o.reshape(B, S, Hq, hd)

@@ -1,0 +1,260 @@
+"""Scan-aware cost extraction for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+program built around ``lax.scan`` (layer stacks, microbatch accumulation,
+chunked attention) under-reports FLOPs/bytes by the product of its trip
+counts.  Two replacements:
+
+* ``jaxpr_cost(closed_jaxpr)`` — walks the GLOBAL (pre-partitioning) jaxpr,
+  multiplying through every ``scan`` length.  FLOPs are exact for
+  dot_general (2·M·N·K·batch) and conv; elementwise FLOPs are counted 1/elt.
+  Bytes are a structural HBM-traffic model: dot operands+result, gather /
+  scatter / dynamic-slice results, and elementwise results are charged once
+  (fusion-blind: an over-estimate for fused elementwise chains, recorded as
+  methodology in EXPERIMENTS.md §Roofline).
+
+* ``hlo_collective_bytes(text)`` — parses the compiled per-device HLO,
+  multiplying collective result bytes inside while bodies by the loop trip
+  count (recovered from the loop condition's comparison constant).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import jax
+import numpy as np
+
+_ELTWISE_SKIP = {"broadcast_in_dim", "reshape", "transpose", "squeeze",
+                 "convert_element_type", "slice", "iota", "copy",
+                 "stop_gradient", "bitcast_convert_type"}
+
+
+def _nbytes(aval) -> int:
+    return int(np.prod(aval.shape)) * aval.dtype.itemsize if aval.shape \
+        else aval.dtype.itemsize
+
+
+def _size(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def jaxpr_cost(jaxpr) -> Dict[str, float]:
+    """Returns {"flops": f, "bytes": b} for a ClosedJaxpr, scan-aware."""
+    return _walk(jaxpr.jaxpr)
+
+
+def _walk(jaxpr) -> Dict[str, float]:
+    flops = 0.0
+    bytes_ = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            inner = _walk(eqn.params["jaxpr"].jaxpr)
+            n = eqn.params["length"]
+            flops += inner["flops"] * n
+            bytes_ += inner["bytes"] * n
+        elif name == "while":
+            inner = _walk(eqn.params["body_jaxpr"].jaxpr)
+            flops += inner["flops"]              # trip count unknown; rare
+            bytes_ += inner["bytes"]
+        elif name == "cond":
+            branches = [_walk(b.jaxpr) for b in eqn.params["branches"]]
+            flops += max(b["flops"] for b in branches)
+            bytes_ += max(b["bytes"] for b in branches)
+        elif name == "dot_general":
+            ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+            a, b = eqn.invars[0].aval, eqn.invars[1].aval
+            batch = int(np.prod([a.shape[i] for i in lb])) if lb else 1
+            k = int(np.prod([a.shape[i] for i in lc])) if lc else 1
+            m = _size(a) // max(batch * k, 1)
+            n_ = _size(b) // max(batch * k, 1)
+            flops += 2.0 * batch * m * n_ * k
+            bytes_ += _nbytes(a) + _nbytes(b) + _nbytes(eqn.outvars[0].aval)
+        elif name in ("gather", "take", "dynamic_slice",
+                      "dynamic_update_slice", "scatter", "scatter-add",
+                      "scatter_add", "concatenate", "pad"):
+            out_b = sum(_nbytes(v.aval) for v in eqn.outvars)
+            bytes_ += out_b
+        elif name in _ELTWISE_SKIP:
+            pass
+        else:
+            # generic: recurse into ANY sub-jaxpr param (pjit, remat2,
+            # custom_vjp_call, closed_call, ...); else charge elementwise
+            subs = _sub_jaxprs(eqn.params)
+            if subs:
+                for sub in subs:
+                    inner = _walk(sub)
+                    flops += inner["flops"]
+                    bytes_ += inner["bytes"]
+            else:
+                out_n = sum(_size(v.aval) for v in eqn.outvars)
+                out_b = sum(_nbytes(v.aval) for v in eqn.outvars)
+                flops += out_n
+                bytes_ += out_b
+    return {"flops": flops, "bytes": bytes_}
+
+
+def _sub_jaxprs(params):
+    subs = []
+    for v in params.values():
+        if hasattr(v, "jaxpr"):                          # ClosedJaxpr
+            subs.append(v.jaxpr)
+        elif hasattr(v, "eqns"):                         # raw Jaxpr
+            subs.append(v)
+        elif isinstance(v, (list, tuple)):
+            for vi in v:
+                if hasattr(vi, "jaxpr"):
+                    subs.append(vi.jaxpr)
+                elif hasattr(vi, "eqns"):
+                    subs.append(vi)
+    return subs
+
+
+# ------------------------------------------------------------------ HLO side
+# a computation definition: column-0 "%name (args...) -> type {" (args may
+# contain nested parens for tuple types)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\n]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_KIND_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+
+
+def _coll_line(line: str):
+    """Parse one HLO line; return (kind, result_bytes) for a collective op —
+    summing ALL elements of tuple-shaped results (variadic all-reduces carry
+    one entry per parameter shard) — or None."""
+    m = _KIND_RE.search(line)
+    if not m or m.group(2) == "-done":
+        return None
+    eq = line.find("=")
+    if eq < 0 or eq > m.start():
+        return None
+    b = 0
+    for dm in _SHAPE_RE.finditer(line[eq + 1:m.start()]):
+        dt, dims = dm.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b += n * _DTYPE_BYTES.get(dt, 4)
+    return m.group(1), b
+_GROUPS_RE = re.compile(
+    r"replica_groups=(?:\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+    r"|\{\{([0-9,]+)\})")
+
+
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([0-9,{} ]+)\}")
+
+
+def _spans_pod(line: str, pod_size: int) -> bool:
+    """True if the collective's replica groups mix devices from different
+    pods (device id // pod_size differs within a group).  collective-permute
+    carries source_target_pairs instead of replica_groups."""
+    pm = _PAIRS_RE.search(line)
+    if pm:
+        nums = [int(x) for x in re.findall(r"\d+", pm.group(1))]
+        pairs = list(zip(nums[::2], nums[1::2]))
+        return any(a // pod_size != b // pod_size for a, b in pairs)
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return False
+    if m.group(5) is not None:                           # explicit {{...}}
+        ids = [int(x) for x in m.group(5).split(",") if x]
+        return len({i // pod_size for i in ids}) > 1
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    perm = ([int(x) for x in m.group(4).split(",")]
+            if m.group(4) else list(range(len(dims))))
+    ids = np.arange(int(np.prod(dims))).reshape(dims).transpose(perm) \
+        .reshape(g, s)
+    pods = ids // pod_size
+    return bool((pods != pods[:, :1]).any())
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s*constant\((\d+)\)")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _split_computations(text: str) -> Dict[str, str]:
+    comps = {}
+    cur, buf = None, []
+    for line in text.splitlines():
+        m = _COMP_RE.match(line) if not line.startswith(" ") else None
+        if m:
+            if cur is not None:
+                comps[cur] = "\n".join(buf)
+            cur = m.group(1)
+            buf = [line]
+        else:
+            buf.append(line)
+    if cur is not None:
+        comps[cur] = "\n".join(buf)
+    return comps
+
+
+def hlo_collective_bytes(text: str, pod_size: int = 0) -> Dict[str, float]:
+    """Collective result bytes by kind, multiplied through while trip counts.
+
+    With ``pod_size`` > 0 (multi-pod runs), also reports ``inter_pod`` — the
+    subtotal of collectives whose replica groups cross a pod boundary (the
+    traffic on the slow inter-pod links, the term the paper's FedAvg/local-
+    SGD schedule attacks)."""
+    comps = _split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return {}
+
+    def trip_count(cond_name: str) -> int:
+        body = comps.get(cond_name, "")
+        consts = [int(c) for c in _CONST_RE.findall(body)]
+        return max(consts) if consts else 1
+
+    def visit(comp_name: str, seen=()) -> Dict[str, float]:
+        if comp_name in seen or comp_name not in comps:
+            return {}
+        out: Dict[str, float] = {}
+        body = comps[comp_name]
+        for line in body.splitlines():
+            parsed = _coll_line(line)
+            if parsed is None:
+                continue
+            kind, b = parsed
+            out[kind] = out.get(kind, 0) + b
+            if pod_size and _spans_pod(line, pod_size):
+                out["inter_pod"] = out.get("inter_pod", 0) + b
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.groups()
+            tc = trip_count(cond)
+            inner = visit(wbody, seen + (comp_name,))
+            for k, v in inner.items():
+                out[k] = out.get(k, 0) + v * tc
+        # non-while calls (fusion kernels do not contain collectives on TPU,
+        # but conditionals / calls may)
+        for m in re.finditer(r"(?:calls|to_apply|branch_computations)="
+                             r"{?%?([\w.\-]+)", body):
+            sub = m.group(1)
+            if sub.startswith(("region", "cond", "body", "fused",
+                               "add", "max", "min")):
+                continue
+            inner = visit(sub, seen + (comp_name,))
+            for k, v in inner.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    return visit(entry)

@@ -1,0 +1,481 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, WITHOUT allocating a single model byte.
+
+For each combination this builds ShapeDtypeStruct stand-ins for params,
+optimizer state, caches and the input batch, jits the appropriate step
+(train_step / prefill_step / decode_step) with explicit in/out shardings
+derived from the sharding rules, and runs ``.lower().compile()``.  The
+compiled artifact yields:
+
+  * ``memory_analysis()``  — per-device bytes (proves the config fits HBM)
+  * ``cost_analysis()``    — per-device HLO FLOPs + bytes for §Roofline
+  * collective bytes       — parsed from the optimized HLO text
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json``; the
+roofline reader (`launch.roofline` / `benchmarks.bench_roofline`) turns them
+into the EXPERIMENTS.md table.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import costmodel, mesh as mesh_mod
+from repro.models import transformer as tf
+from repro.sharding import ShardingRules, use_rules
+from repro.sharding.rules import safe_spec
+
+# long-context policy (DESIGN.md §long_500k): attention-free archs run native;
+# attention archs run the framework's sliding-window variant
+LONG_WINDOW = 8192
+PARAM_DTYPE = jnp.bfloat16
+
+# optimizer per arch: adafactor where Adam's fp32 m+v would not fit 16 GB/chip
+ADAFACTOR_ARCHS = ("deepseek-v3-671b",)
+
+# gradient-accumulation depth for train_4k, by model size (per-device
+# activation memory scales with global_batch / microbatches)
+MICROBATCHES = {
+    "qwen1.5-0.5b": 1, "musicgen-medium": 2, "xlstm-1.3b": 2,
+    "codeqwen1.5-7b": 2, "zamba2-7b": 2, "qwen3-14b": 4,
+    "llava-next-34b": 8, "qwen2-72b": 8, "dbrx-132b": 8,
+    "deepseek-v3-671b": 16,
+}
+
+
+def pick_optimizer(arch: str):
+    if arch in ADAFACTOR_ARCHS:
+        return optim.adafactor()
+    return optim.adam()
+
+
+# ------------------------------------------------------------------ specs
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStruct stand-ins for every model input of this step kind."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    if shape.kind == "train":
+        if cfg.arch_type == "audio":
+            K = cfg.frontend.n_codebooks
+            return {"tokens": tok(B, K, S), "labels": tok(B, K, S)}
+        if cfg.arch_type == "vlm":
+            nm = cfg.frontend.n_media_tokens
+            return {"tokens": tok(B, S - nm), "labels": tok(B, S),
+                    "media": jax.ShapeDtypeStruct(
+                        (B, nm, cfg.frontend.embed_dim), jnp.bfloat16)}
+        return {"tokens": tok(B, S), "labels": tok(B, S)}
+    if shape.kind == "prefill":
+        if cfg.arch_type == "audio":
+            K = cfg.frontend.n_codebooks
+            return {"tokens": tok(B, K, S)}
+        if cfg.arch_type == "vlm":
+            nm = cfg.frontend.n_media_tokens
+            return {"tokens": tok(B, S - nm),
+                    "media": jax.ShapeDtypeStruct(
+                        (B, nm, cfg.frontend.embed_dim), jnp.bfloat16)}
+        return {"tokens": tok(B, S)}
+    # decode: ONE new token against a cache of size seq_len
+    if cfg.arch_type == "audio":
+        K = cfg.frontend.n_codebooks
+        return {"tokens": tok(B, K, 1)}
+    return {"tokens": tok(B, 1)}
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.name == "long_500k" and cfg.arch_type in (
+            "dense", "vlm", "audio", "moe", "hybrid"):
+        return LONG_WINDOW
+    return cfg.sliding_window
+
+
+def cache_capacity(cfg: ModelConfig, shape: InputShape) -> int:
+    w = decode_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+# ------------------------------------------------------------ cache pspecs
+def cache_pspec_tree(cache_shapes, mesh, rules: ShardingRules):
+    """PartitionSpecs for decode caches, by leaf name.
+
+    KV caches are SEQUENCE-sharded over the tensor axis (DESIGN §5) so GQA
+    archs with few KV heads still use all 16 model-axis shards; SSM/xLSTM
+    states shard their head axis over the tensor axis; everything shards
+    batch over the data axes.
+    """
+    batch = rules.logical["batch"]
+    tp = rules.tensor_axis
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        nd = leaf.ndim
+        def pad(*axes):
+            return P(*((None,) * (nd - len(axes)) + tuple(axes)))
+        if name in ("k", "v"):               # (..., B, W, Hkv, hd)
+            s = pad(batch, tp, None, None)
+        elif name in ("c_kv", "k_rope"):     # (..., B, W, r)
+            s = pad(batch, tp, None)
+        elif name == "pos_ids":
+            s = P(*((None,) * nd))
+        elif name == "ssm":                  # (..., B, nh, hd, ds)
+            s = pad(batch, tp, None, None)
+        elif name == "conv":                 # (..., B, K-1, Cd)
+            s = pad(batch, None, tp)
+        elif name == "C":                    # (..., B, nh, hd, hd)
+            s = pad(batch, tp, None, None)
+        elif name in ("n", "c", "h", "m"):   # (..., B, nh, hd)
+            s = pad(batch, tp, None)
+        else:
+            s = P(*((None,) * nd))
+        return safe_spec(leaf.shape, s, mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = [spec_for(tuple(_kname(k) for k in kp), leaf)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _kname(k):
+    return str(getattr(k, "key", getattr(k, "idx", k)))
+
+
+def batch_pspec_tree(specs, mesh, rules: ShardingRules):
+    batch = rules.logical["batch"]
+
+    def one(name, leaf):
+        s = P(*((batch,) + (None,) * (leaf.ndim - 1)))
+        return safe_spec(leaf.shape, s, mesh)
+
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def _opt_state_pspecs(arch: str, p_specs, params_shapes):
+    """Optimizer-state PartitionSpecs mirroring the parameter shardings.
+
+    adam: (m, v, t) — m/v shard exactly like their params.
+    adafactor: ((vr, vc) per param, t) — vr drops the last param axis,
+    vc drops the second-to-last (rank-1 factored second moment).
+    """
+    is_p = lambda x: isinstance(x, P)
+    if arch in ADAFACTOR_ARCHS:
+        def factor(spec, p):
+            s = tuple(spec) + (None,) * (p.ndim - len(tuple(spec)))
+            if p.ndim >= 2:
+                return (P(*s[:-1]), P(*(s[:-2] + s[-1:])))
+            return (P(*s), None)
+        fac = jax.tree.map(factor, p_specs, params_shapes, is_leaf=is_p)
+        return (fac, P())
+    return (p_specs, p_specs, P())
+
+
+# ------------------------------------------------------------------ steps
+def build_lowerable(arch: str, shape_name: str, *, multi_pod: bool = False,
+                    beta: float = 1.0, remat: bool = True,
+                    window_override=None, rules_override=None,
+                    microbatches=None):
+    """Returns (jitted_fn, arg_specs) ready for .lower(*arg_specs)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    shard_batch = shape.global_batch % mesh.shape["data"] == 0
+    # activation-FSDP where the remat-saved residual stream would blow HBM:
+    # saved-x bytes/dev = n_layers · (B_mb/data) · S · d · 2  (bf16)
+    mb_n = (MICROBATCHES.get(arch, 1) if microbatches is None
+            else microbatches) if shape.kind == "train" else 1
+    per_dev_b = max(shape.global_batch // mb_n // mesh.shape["data"], 1)
+    saved_x = cfg.n_layers * per_dev_b * shape.seq_len * cfg.d_model * 2
+    shard_acts = shape.kind == "train" and saved_x > 3 * 2 ** 30
+    rules = rules_override or mesh_mod.make_rules(
+        mesh, shard_batch=shard_batch, shard_activations=shard_acts)
+
+    params_shapes = jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg, dtype=PARAM_DTYPE))
+    p_specs = rules.pspec_tree(params_shapes)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    params_in = jax.tree.map(
+        lambda sh, sd: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=sd),
+        params_shapes, p_shard)
+    bspecs = input_specs(cfg, shape)
+    b_pspec = batch_pspec_tree(bspecs, mesh, rules)
+    b_shard = {k: NamedSharding(mesh, s) for k, s in b_pspec.items()}
+    batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                        sharding=b_shard[k])
+                for k, v in bspecs.items()}
+    window = (decode_window(cfg, shape) if window_override is None
+              else window_override)
+
+    if shape.kind == "train":
+        optimizer = pick_optimizer(arch)
+        mb = MICROBATCHES.get(arch, 1) if microbatches is None else microbatches
+        # bf16 gradient accumulation for the 671B fit (DESIGN.md §Assumptions)
+        accum = jnp.bfloat16 if arch in ADAFACTOR_ARCHS else jnp.float32
+        step = tf.make_train_step(cfg, optimizer, beta=beta, remat=remat,
+                                  microbatches=mb, accum_dtype=accum)
+        opt_shapes = jax.eval_shape(lambda p: optimizer.init(p), params_shapes)
+        o_specs = _opt_state_pspecs(arch, p_specs, params_shapes)
+        o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                               is_leaf=lambda x: isinstance(x, P))
+        opt_in = jax.tree.map(
+            lambda sh, sd: jax.ShapeDtypeStruct(sh.shape, sh.dtype,
+                                                sharding=sd),
+            opt_shapes, o_shard)
+
+        def fn(params, opt_state, batch, lr):
+            with use_rules(rules):
+                return step(params, opt_state, batch, lr)
+
+        # donate params + optimizer state: the updated trees alias their
+        # inputs — without this memory_analysis double-counts them
+        jf = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard, None),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        args = (params_in, opt_in, batch_in,
+                jax.ShapeDtypeStruct((), jnp.float32))
+        return mesh, jf, args
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            with use_rules(rules):
+                caches = tf.init_cache(cfg, shape.global_batch,
+                                       cache_capacity(cfg, shape))
+                logits, _, (caches, _, _) = tf.forward(
+                    params, batch, cfg, dtype=jnp.bfloat16, window=window,
+                    caches=caches, remat=False)
+                last = (logits[:, :, -1:] if cfg.arch_type == "audio"
+                        else logits[:, -1:])
+                return last, caches
+
+        jf = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                     out_shardings=None)
+        return mesh, jf, (params_in, batch_in)
+
+    # decode
+    cap = cache_capacity(cfg, shape)
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, cap))
+    c_pspec = cache_pspec_tree(cache_shapes, mesh, rules)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_pspec,
+                           is_leaf=lambda x: isinstance(x, P))
+    caches_in = jax.tree.map(
+        lambda sh, sd: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=sd),
+        cache_shapes, c_shard)
+
+    def fn(params, caches, batch, pos):
+        with use_rules(rules):
+            return tf.decode_step(params, caches, batch, pos, cfg,
+                                  dtype=jnp.bfloat16, window=window)
+
+    # donate the KV/SSM caches — decode updates them in place
+    jf = jax.jit(fn, in_shardings=(p_shard, c_shard, b_shard, None),
+                 out_shardings=(None, c_shard), donate_argnums=(1,))
+    args = (params_in, caches_in, batch_in,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return mesh, jf, args
+
+
+# ------------------------------------------------------- local-SGD (paper)
+def build_local_sgd(arch: str, shape_name: str = "train_4k", *,
+                    inner_steps: int = 8, microbatches=None):
+    """The paper's FedAvg schedule as a cross-pod training strategy (DiLoCo):
+    H inner steps per pod with NO cross-pod collectives, then ONE parameter
+    pmean across pods — inter-pod traffic drops ~H× vs per-step sync.
+
+    Params/opt-state carry a leading pod axis (per-pod replicas, they drift
+    between syncs); ``shard_map`` over the pod axis makes `pod` manual while
+    data/model stay auto (GSPMD shards the inner step per pod exactly like
+    the single-pod layout).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=True)
+    n_pod = mesh.shape["pod"]
+    # inner rules: single-pod style (no pod axis — pod is manual here)
+    rules = ShardingRules(mesh, fsdp_axis="data", tensor_axis="model",
+                          data_axes=("data",), pod_axis=None,
+                          shard_activations=True)
+    optimizer = pick_optimizer(arch)
+    mb = MICROBATCHES.get(arch, 1) if microbatches is None else microbatches
+    step = tf.make_train_step(cfg, optimizer, remat=True, microbatches=mb)
+
+    params_shapes = jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg, dtype=PARAM_DTYPE))
+    p_specs = rules.pspec_tree(params_shapes)
+    pod_spec = lambda s: P(*(("pod",) + tuple(s)))
+    p_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, pod_spec(s)), p_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    podded = lambda sh, sd: jax.ShapeDtypeStruct(
+        (n_pod,) + sh.shape, sh.dtype, sharding=sd)
+    params_in = jax.tree.map(podded, params_shapes, p_shard)
+
+    opt_shapes = jax.eval_shape(lambda p: optimizer.init(p), params_shapes)
+    o_specs = _opt_state_pspecs(arch, p_specs, params_shapes)
+    o_shard = jax.tree.map(lambda s: NamedSharding(mesh, pod_spec(s)),
+                           o_specs, is_leaf=lambda x: isinstance(x, P))
+    opt_in = jax.tree.map(podded, opt_shapes, o_shard)
+
+    bspecs = input_specs(cfg, shape)
+    # batch laid out (pod, H, B/pod, ...): pod-major, then inner steps
+    b_shard = {k: NamedSharding(
+        mesh, P("pod", None, "data", *((None,) * (v.ndim - 1))))
+        for k, v in bspecs.items()}
+    batch_in = {k: jax.ShapeDtypeStruct(
+        (n_pod, inner_steps, v.shape[0] // n_pod) + v.shape[1:], v.dtype,
+        sharding=b_shard[k]) for k, v in bspecs.items()}
+
+    def round_fn(params_p, opt_p, batches, lr):
+        """One local-SGD round: H inner steps per pod (vmapped over the pod
+        dim with spmd_axis_name so constraints pin per-pod shards), then the
+        paper's FedAvg aggregation — a single cross-pod parameter mean."""
+        def pod_train(params, opt, batches_pod):
+            def scan_body(carry, b):
+                p, o = carry
+                with use_rules(rules):
+                    p, o, m = step(p, o, b, lr)
+                return (p, o), m["loss"]
+            (p, o), losses = jax.lax.scan(scan_body, (params, opt),
+                                          batches_pod)
+            return p, o, jnp.mean(losses)
+
+        p2, o2, loss = jax.vmap(pod_train, spmd_axis_name="pod")(
+            params_p, opt_p, batches)
+        # FedAvg across pods (Alg. 1 aggregation, once per H steps)
+        synced = jax.tree.map(
+            lambda t: jnp.broadcast_to(jnp.mean(t, axis=0, keepdims=True),
+                                       t.shape), p2)
+        return synced, o2, jnp.mean(loss)
+
+    jf = jax.jit(round_fn,
+                 in_shardings=(p_shard, o_shard, b_shard, None),
+                 out_shardings=(p_shard, o_shard, None))
+    args = (params_in, opt_in, batch_in,
+            jax.ShapeDtypeStruct((), jnp.float32))
+    return mesh, jf, args
+
+
+# ------------------------------------------------------------- extraction
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum RESULT-shape bytes of every collective op in the optimized HLO.
+
+    (Operand shapes are not printed on the op line in HLO text; result bytes
+    equal operand bytes for all-reduce/all-to-all/permute, overcount
+    all-gather by the gather factor and undercount reduce-scatter by the
+    scatter factor — adequate for a first-order collective-traffic roofline,
+    and recorded as the methodology in EXPERIMENTS.md.)
+    """
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dt, dims, kind = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES.get(dt, 4)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str = "experiments/dryrun", quiet: bool = False,
+            tag: str = "", **kw):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh, jf, args = build_lowerable(arch, shape_name, multi_pod=multi_pod,
+                                     **kw)
+    with mesh:
+        traced = jf.trace(*args)
+        gcost = costmodel.jaxpr_cost(traced.jaxpr)       # GLOBAL, scan-aware
+        lowered = traced.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = costmodel.hlo_collective_bytes(hlo)           # per-device, ×trips
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": n_chips,
+        "kind": SHAPES_BY_NAME[shape_name].kind,
+        "flops_global": gcost["flops"],
+        "bytes_global": gcost["bytes"],
+        "xla_flops_per_device": cost.get("flops", float("nan")),
+        "xla_bytes_per_device": cost.get("bytes accessed", float("nan")),
+        "collective_bytes_per_device": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    if not quiet:
+        gb = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+              + mem.output_size_in_bytes) / 2 ** 30
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK  "
+              f"flops(global)={rec['flops_global']:.3e}  "
+              f"bytes(global)={rec['bytes_global']:.3e}  "
+              f"mem/dev≈{gb:.1f} GiB  "
+              f"coll/dev={sum(coll.values())/2**20:.0f} MiB  "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES_BY_NAME))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    combos = ([(a, s) for a in ARCH_IDS for s in SHAPES_BY_NAME]
+              if args.all else [(args.arch, args.shape)])
+    failures = []
+    for arch, shape in combos:
+        try:
+            run_one(arch, shape, multi_pod=args.multi_pod, out_dir=args.out)
+        except Exception as e:                           # noqa: BLE001
+            failures.append((arch, shape, repr(e)[:200]))
+            print(f"[dryrun] {arch} × {shape}: FAIL {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

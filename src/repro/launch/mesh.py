@@ -1,0 +1,39 @@
+"""Production mesh construction + sharding-rule helpers.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before calling it;
+tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16×16 = 256 chips/pod; 2 pods for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mesh, *, shard_batch: bool = True,
+               shard_activations: bool = False) -> ShardingRules:
+    multi = "pod" in mesh.axis_names
+    # on the multi-pod mesh FSDP spans BOTH pod and data axes (32-way):
+    # params/grads/optimizer shrink 2× per chip vs single-pod
+    return ShardingRules(mesh,
+                         fsdp_axis=("pod", "data") if multi else "data",
+                         tensor_axis="model",
+                         data_axes=("data",),
+                         pod_axis="pod" if multi else None,
+                         shard_batch=shard_batch,
+                         shard_activations=shard_activations)
+
+
+# TPU v5e hardware model for the roofline (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link

@@ -1,0 +1,101 @@
+"""Roofline-term derivation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (seconds per step), TPU v5e:
+  compute    = FLOPs_global / (chips × 197e12)
+  memory     = bytes_global / (chips × 819e9)
+  collective = collective_bytes_per_device / 50e9   (per-device ICI traffic)
+
+FLOPs/bytes come from the scan-aware jaxpr cost model (global program);
+collective bytes from the while-aware HLO parser (per-device partitioned
+program).  MODEL_FLOPS = 6·N·D for train (N = active params for MoE), 2·N·D
+for prefill, 2·N·D(1 token) for decode — the ratio MODEL/HLO shows how much
+compiled compute is "useful" (remat + routing overhead push it down).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token per request
+
+
+def terms(rec: Dict) -> Dict:
+    chips = rec["n_chips"]
+    comp = rec["flops_global"] / (chips * PEAK_FLOPS)
+    memt = rec["bytes_global"] / (chips * HBM_BW)
+    coll = sum(rec["collective_bytes_per_device"].values()) / ICI_BW
+    dom = max(("compute", comp), ("memory", memt), ("collective", coll),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hbm_gib = (rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+               + rec["memory"]["output_bytes"]) / 2 ** 30
+    return {
+        "compute_s": comp, "memory_s": memt, "collective_s": coll,
+        "dominant": dom, "model_flops": mf,
+        "useful_ratio": mf / max(rec["flops_global"], 1.0),
+        "hbm_gib_per_dev": hbm_gib,
+        "fits_16g": hbm_gib <= 16.0,
+    }
+
+
+REQUIRED = ("n_chips", "flops_global", "bytes_global",
+            "collective_bytes_per_device", "memory", "arch", "shape")
+
+
+def load_records(dir_: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(Path(dir_).glob("*.json")):
+        r = json.loads(p.read_text())
+        if not all(k in r for k in REQUIRED):
+            continue                  # side artifacts (local-SGD etc.)
+        r["file"] = p.name
+        recs.append(r)
+    return recs
+
+
+def table(recs: List[Dict], fmt: str = "md") -> str:
+    rows = []
+    head = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "useful", "HBM GiB/dev")
+    for r in recs:
+        t = terms(r)
+        rows.append((r["arch"], r["shape"], r["mesh"],
+                     f"{t['compute_s']:.3f}", f"{t['memory_s']:.3f}",
+                     f"{t['collective_s']:.3f}", t["dominant"],
+                     f"{t['useful_ratio']:.2f}",
+                     f"{t['hbm_gib_per_dev']:.1f}"
+                     + ("" if t["fits_16g"] else " ⚠")))
+    if fmt == "md":
+        out = ["| " + " | ".join(head) + " |",
+               "|" + "|".join("---" for _ in head) + "|"]
+        out += ["| " + " | ".join(map(str, r)) + " |" for r in rows]
+        return "\n".join(out)
+    return "\n".join(",".join(map(str, (head,) + tuple(rows))))
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(table(recs))
+
+
+if __name__ == "__main__":
+    main()

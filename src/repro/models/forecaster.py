@@ -1,0 +1,104 @@
+"""The paper's demand forecasters (§3.2): stacked LSTM / GRU + linear head.
+
+Univariate input: a look-back window of L normalized kWh readings, shape
+(B, L, input_dim); output: (B, horizon) — multi-step direct forecast, matching
+the paper's 8-step look-back / 4-step (1 h) horizon.
+
+The recurrent cells are written so the per-step compute is one fused function
+of ``(x_t, state, params)``; ``cell_impl="jnp"`` uses the pure-jnp path (the
+oracle), ``cell_impl="pallas"`` routes through the fused Pallas TPU cell in
+``repro.kernels`` (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ForecasterConfig
+from repro.models.layers import dense_init
+
+
+# ------------------------------------------------------------------ init
+def init_forecaster(key, cfg: ForecasterConfig, dtype=jnp.float32) -> Dict:
+    gates = 4 if cfg.cell == "lstm" else 3
+    layers = []
+    for l in range(cfg.n_layers):
+        inp = cfg.input_dim if l == 0 else cfg.hidden_dim
+        key, k1, k2 = jax.random.split(key, 3)
+        layers.append({
+            "wx": dense_init(k1, inp, gates * cfg.hidden_dim, dtype=dtype),
+            "wh": dense_init(k2, cfg.hidden_dim, gates * cfg.hidden_dim,
+                             scale=cfg.hidden_dim ** -0.5, dtype=dtype),
+            "b": jnp.zeros((gates * cfg.hidden_dim,), dtype),
+        })
+    key, kh = jax.random.split(key)
+    head = {"w": dense_init(kh, cfg.hidden_dim, cfg.horizon, dtype=dtype),
+            "b": jnp.zeros((cfg.horizon,), dtype)}
+    return {"layers": layers, "head": head}
+
+
+# ------------------------------------------------------------------ cells
+def lstm_cell(x_t, h, c, p):
+    """One LSTM step (paper §3.2.1). x_t: (B, in); h, c: (B, H)."""
+    z = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def gru_cell(x_t, h, p):
+    """One GRU step (paper §3.2.2). Gate layout: [z | r | h̃]."""
+    H = h.shape[-1]
+    zx = x_t @ p["wx"] + p["b"]
+    zh = h @ p["wh"]
+    z = jax.nn.sigmoid(zx[..., :H] + zh[..., :H])
+    r = jax.nn.sigmoid(zx[..., H:2 * H] + zh[..., H:2 * H])
+    h_tilde = jnp.tanh(zx[..., 2 * H:] + r * zh[..., 2 * H:])
+    return z * h + (1.0 - z) * h_tilde
+
+
+def _pallas_cells():
+    from repro.kernels import ops as kops
+    return kops.lstm_cell_fused, kops.gru_cell_fused
+
+
+# ------------------------------------------------------------------ forward
+@functools.partial(jax.jit, static_argnames=("cfg", "cell_impl"))
+def forecast(params, x, cfg: ForecasterConfig, cell_impl: str = "jnp"):
+    """x: (B, L, input_dim) -> (B, horizon)."""
+    B = x.shape[0]
+    H = cfg.hidden_dim
+    if cell_impl == "pallas":
+        lstm_step, gru_step = _pallas_cells()
+    else:
+        lstm_step, gru_step = lstm_cell, gru_cell
+
+    h_seq = x
+    for p in params["layers"]:
+        if cfg.cell == "lstm":
+            def step(carry, x_t, p=p):
+                h, c = carry
+                h, c = lstm_step(x_t, h, c, p)
+                return (h, c), h
+            init = (jnp.zeros((B, H), x.dtype), jnp.zeros((B, H), x.dtype))
+        else:
+            def step(carry, x_t, p=p):
+                h = gru_step(x_t, carry[0], p)
+                return (h, carry[1]), h
+            init = (jnp.zeros((B, H), x.dtype), jnp.zeros((B, 0), x.dtype))
+        (_, _), hs = jax.lax.scan(step, init, h_seq.swapaxes(0, 1))
+        h_seq = hs.swapaxes(0, 1)                       # (B, L, H)
+    h_last = h_seq[:, -1]
+    return h_last @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params, batch, cfg: ForecasterConfig, loss, cell_impl="jnp"):
+    """batch: {"x": (B,L,1), "y": (B,horizon)} -> scalar loss."""
+    pred = forecast(params, batch["x"], cfg, cell_impl)
+    return loss(pred, batch["y"])

@@ -1,0 +1,67 @@
+"""Modality frontends — the sanctioned stub carve-out.
+
+VLM (llava-next): the ViT/SigLIP encoder is a STUB; ``input_specs`` supplies
+pre-encoder patch embeddings (B, n_media_tokens, embed_dim) as if produced by
+the anyres tiling pipeline.  The multimodal PROJECTOR (2-layer MLP,
+embed_dim → d_model) IS implemented — it is trained with the LM.
+
+Audio (musicgen): the EnCodec codec is a STUB; tokens arrive as
+(B, n_codebooks, S) code indices (delay pattern applied by the data pipeline).
+Per-codebook embeddings (summed at input) and per-codebook LM heads ARE
+implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------------ VLM
+def init_projector(key, cfg: ModelConfig, dtype=jnp.float32):
+    f = cfg.frontend
+    k1, k2 = jax.random.split(key)
+    return {
+        "proj_in": dense_init(k1, f.embed_dim, cfg.d_model, dtype=dtype),
+        "proj_out": dense_init(k2, cfg.d_model, cfg.d_model,
+                               scale=cfg.d_model ** -0.5, dtype=dtype),
+    }
+
+
+def project_media(params, media, dtype):
+    """media: (B, n_media, embed_dim) -> (B, n_media, d_model)."""
+    h = jnp.einsum("bme,ed->bmd", media.astype(dtype),
+                   params["proj_in"].astype(dtype))
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bmd,de->bme", h, params["proj_out"].astype(dtype))
+
+
+# ------------------------------------------------------------------ audio
+def init_codebook_embeddings(key, cfg: ModelConfig, dtype=jnp.float32):
+    f = cfg.frontend
+    k1, k2 = jax.random.split(key)
+    emb = (jax.random.normal(
+        k1, (f.n_codebooks, cfg.vocab_size, cfg.d_model), jnp.float32)
+        * 0.02).astype(dtype)
+    heads = dense_init(k2, cfg.d_model,
+                       f.n_codebooks * cfg.vocab_size, dtype=dtype)
+    return {"cb_embed": emb,
+            "cb_heads": heads.reshape(cfg.d_model, f.n_codebooks,
+                                      cfg.vocab_size)}
+
+
+def embed_codes(params, codes, dtype):
+    """codes: (B, K, S) -> summed embeddings (B, S, d)."""
+    K = codes.shape[1]
+    outs = [jnp.take(params["cb_embed"][k].astype(dtype), codes[:, k], axis=0)
+            for k in range(K)]
+    return sum(outs)
+
+
+def codebook_logits(params, h):
+    """h: (B, S, d) -> (B, K, S, V)."""
+    logits = jnp.einsum("bsd,dkv->bksv", h, params["cb_heads"].astype(h.dtype))
+    return constrain(logits, "batch", None, None, "act_vocab")

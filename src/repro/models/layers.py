@@ -1,0 +1,73 @@
+"""Shared building blocks: norms, RoPE, dense MLP, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def dense_init(key, in_dim, out_dim, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), dtype) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "w_gate": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "w_out": dense_init(k3, d_ff, d_model, scale=d_ff ** -0.5, dtype=dtype),
+    }
+
+
+def mlp(params, x):
+    """SwiGLU MLP. x: (..., d)."""
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    h = h * jax.nn.silu(g)
+    h = constrain(h, "batch", None, "act_ff")
+    return jnp.einsum("...f,fd->...d", h, params["w_out"].astype(x.dtype))
+
+
+# ------------------------------------------------------------------ embeddings
+def init_embedding(key, vocab, d_model, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model), dtype) * 0.02).astype(dtype)
+
+
+def embed(embed_tokens, tokens, dtype):
+    return jnp.take(embed_tokens.astype(dtype), tokens, axis=0)

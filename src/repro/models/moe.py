@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN — GShard-style capacity-based dispatch/combine.
+
+TPU-native design: tokens are flattened to (G, S_g, d) groups, each group
+routes its tokens to E experts with per-expert capacity
+C = ceil(cf · S_g · k / E).  Dispatch and combine are one-hot einsums — the
+canonical GShard/Mesh-TF formulation that GSPMD turns into all-to-alls when
+the expert axis is mesh-sharded.  Top-k routing with renormalized gates,
+auxiliary load-balance loss (Switch/GShard style), optional DeepSeek-style
+always-on shared experts.
+
+Sharding: expert weights (E, d, ff) carry the expert axis on the ``model``
+mesh axis (see sharding.rules); dispatched activations (G, E, C, d) are
+constrained so E is on ``model`` — the G→E reshard is the all-to-all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d, e.n_experts, scale=d ** -0.5,
+                             dtype=jnp.float32),         # router in fp32
+        "moe_w_in": _expert_init(ks[1], e.n_experts, d, e.d_ff_expert, dtype),
+        "moe_w_gate": _expert_init(ks[2], e.n_experts, d, e.d_ff_expert, dtype),
+        "moe_w_out": _expert_init(ks[3], e.n_experts, e.d_ff_expert, d, dtype,
+                                  scale=e.d_ff_expert ** -0.5),
+    }
+    if e.n_shared_experts:
+        ff_sh = e.n_shared_experts * e.d_ff_expert
+        p["shared_w_in"] = dense_init(ks[4], d, ff_sh, dtype=dtype)
+        p["shared_w_gate"] = dense_init(ks[5], d, ff_sh, dtype=dtype)
+        p["shared_w_out"] = dense_init(ks[6], ff_sh, d,
+                                       scale=ff_sh ** -0.5, dtype=dtype)
+    return p
+
+
+def _expert_init(key, E, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (E, d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def _choose_group(tokens: int, target: int) -> int:
+    """Largest divisor of ``tokens`` that is ≤ target (routing group size)."""
+    for g in range(target, 0, -1):
+        if tokens % g == 0:
+            return g
+    return 1
+
+
+def capacity(cfg: MoEConfig, group_size: int) -> int:
+    c = int(math.ceil(cfg.capacity_factor * group_size * cfg.top_k
+                      / cfg.n_experts))
+    return max(c, cfg.top_k)
+
+
+def _route(router_w, x32, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                   jnp.ndarray]:
+    """x32: (G, S, d) fp32 -> (gates (G,S,k), experts (G,S,k), aux loss)."""
+    logits = jnp.einsum("gsd,de->gse", x32, router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)     # (G,S,k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # GShard aux loss: E * Σ_e (frac tokens to e) · (mean router prob e)
+    E = cfg.n_experts
+    top1 = jax.nn.one_hot(experts[..., 0], E, dtype=jnp.float32)
+    frac = jnp.mean(top1, axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return gates, experts, aux
+
+
+def moe_ffn(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Capacity-dropped tokens contribute zero from the routed experts (the
+    residual stream and shared experts still carry them) — GShard semantics.
+    """
+    e = cfg.moe
+    B, S, d = x.shape
+    tokens = B * S
+    gsz = _choose_group(tokens, min(e.group_size, tokens))
+    G = tokens // gsz
+    xg = x.reshape(G, gsz, d)
+    xg = constrain(xg, "moe_group", None, None)
+
+    gates, experts, aux = _route(params["router"], xg.astype(jnp.float32), e)
+    C = capacity(e, gsz)
+    E = e.n_experts
+
+    # position of each (token, k) in its expert's buffer
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.int32)         # (G,S,k,E)
+    flat = onehot.reshape(G, gsz * e.top_k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - 1                       # (G,S*k,E)
+    pos = jnp.sum(flat * pos_in_e, axis=-1).reshape(G, gsz, e.top_k)
+    keep = pos < C
+    gates_k = gates * keep.astype(gates.dtype)
+
+    # dispatch/combine masks, built per k-slot (Mesh-TF style) so the largest
+    # intermediate is (G, S, E, C), never (G, S, k, E, C)
+    disp = jnp.zeros((G, gsz, E, C), x.dtype)
+    weights = jnp.zeros((G, gsz, E, C), x.dtype)
+    for kk in range(e.top_k):
+        oh = (jax.nn.one_hot(experts[..., kk], E, dtype=x.dtype)[..., None]
+              * jax.nn.one_hot(pos[..., kk], C, dtype=x.dtype)[..., None, :]
+              * keep[..., kk, None, None].astype(x.dtype))       # (G,S,E,C)
+        disp = disp + oh
+        weights = weights + oh * gates_k[..., kk, None, None].astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)                   # (G,E,C,d)
+    xe = constrain(xe, "moe_batch", "act_experts", None, None)
+
+    # expert FFN (SwiGLU), expert-parallel over the model axis
+    w_in = params["moe_w_in"].astype(x.dtype)
+    w_gate = params["moe_w_gate"].astype(x.dtype)
+    w_out = params["moe_w_out"].astype(x.dtype)
+    h = jnp.einsum("gecd,edf->gecf", xe, w_in)
+    g = jnp.einsum("gecd,edf->gecf", xe, w_gate)
+    h = h * jax.nn.silu(g)
+    ye = jnp.einsum("gecf,efd->gecd", h, w_out)                   # (G,E,C,d)
+    ye = constrain(ye, "moe_batch", "act_experts", None, None)
+
+    # combine: gate-weighted scatter back to token order
+    out = jnp.einsum("gsec,gecd->gsd", weights, ye)
+    out = out.reshape(B, S, d)
+
+    if e.n_shared_experts:
+        h = jnp.einsum("bsd,df->bsf", x, params["shared_w_in"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", x, params["shared_w_gate"].astype(x.dtype))
+        h = h * jax.nn.silu(g)
+        h = constrain(h, "batch", None, "act_ff")
+        out = out + jnp.einsum("bsf,fd->bsd", h,
+                               params["shared_w_out"].astype(x.dtype))
+    return out, aux * e.router_aux_weight

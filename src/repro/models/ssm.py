@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Training/prefill uses the chunkwise algorithm (Dao & Gu 2024): within a chunk
+of Q tokens the output is a masked quadratic form (MXU-friendly); across
+chunks a single ``lax.scan`` carries the (nh, hd, ds) state.  Decode is the
+plain single-step recurrence against a conv ring buffer + SSM state.
+
+Layout: x (B, S, d) → in_proj → [z | xBC | dt]; depthwise causal conv over
+xBC; heads nh = d_inner / head_dim; per-head scalar decay a_t = exp(-softplus
+(A) · dt_t) (Mamba2's scalar-identity A).  Gated RMSNorm before out_proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    return s, d_in, nh
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    s, d_in, nh = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * s.n_groups * s.state_dim
+                              + nh, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),          # A = -softplus? see below
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),   # softplus^-1(~0.12)
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[3], d_in, d, scale=d_in ** -0.5, dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_in, nh = _dims(cfg)
+    gdim = s.n_groups * s.state_dim
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * gdim]
+    dt = zxbcdt[..., 2 * d_in + 2 * gdim:]
+    return z, xBC, dt
+
+
+def _conv(xBC, w, b):
+    """Depthwise causal conv over sequence. xBC: (B,S,Cd); w: (K,Cd)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """x_t: (B,Cd); conv_state: (B,K-1,Cd) most-recent-last."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)   # (B,K,Cd)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def _heads(xBC, dt, params, cfg: ModelConfig):
+    s, d_in, nh = _dims(cfg)
+    gdim = s.n_groups * s.state_dim
+    x = xBC[..., :d_in]
+    Bm = xBC[..., d_in:d_in + gdim]
+    Cm = xBC[..., d_in + gdim:]
+    shp = x.shape[:-1]
+    x = x.reshape(*shp, nh, s.head_dim)
+    Bm = Bm.reshape(*shp, s.n_groups, s.state_dim)
+    Cm = Cm.reshape(*shp, s.n_groups, s.state_dim)
+    # broadcast groups over heads
+    rep = nh // s.n_groups
+    Bm = jnp.repeat(Bm, rep, axis=-2)
+    Cm = jnp.repeat(Cm, rep, axis=-2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (...,nh)
+    a = -jnp.exp(params["a_log"])                        # (nh,) negative decay
+    decay = jnp.exp(a * dt)                              # (...,nh) in (0,1)
+    return x, Bm, Cm, dt, decay
+
+
+def ssm_forward(params, x, cfg: ModelConfig, *, state=None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence chunked SSD. x: (B, S, d) -> (B, S, d).
+
+    Returns (out, final_state) — state = {"ssm": (B,nh,hd,ds), "conv": (B,K-1,Cd)}.
+    """
+    s, d_in, nh = _dims(cfg)
+    B, S, _ = x.shape
+    Q = min(s.chunk_size, S)
+    pad = (-S) % Q
+    nc = (S + pad) // Q
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, xBC_raw, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC = _conv(xBC_raw, params["conv_w"].astype(x.dtype), params["conv_b"]
+                .astype(x.dtype))
+    xh, Bm, Cm, dt, decay = _heads(xBC, dt_raw, params, cfg)
+    xh = constrain(xh, "batch", None, "act_heads", None)
+    if pad:
+        # pad to a chunk multiple with IDENTITY steps: decay=1, contribution=0
+        pz = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, Bm, Cm, dt = map(pz, (xh, Bm, Cm, dt))
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1.0)
+
+    # chunk to (nc, B, Q, ...) and scan over chunks — bounds the quadratic
+    # intra-chunk intermediate at one (B, Q, Q, nh) block at a time
+    ch = lambda t: t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+    xh_c, Bm_c, Cm_c, dt_c, decay_c = map(ch, (xh, Bm, Cm, dt, decay))
+    xdt_c = xh_c * dt_c[..., None].astype(xh_c.dtype)    # fold dt into x
+
+    init = (jnp.zeros((B, nh, s.head_dim, s.state_dim), jnp.float32)
+            if state is None else state["ssm"])
+    iq = jnp.arange(Q)
+    causal = iq[:, None] >= iq[None, :]
+
+    def scan_body(st, inp):
+        xdt, Bc, Cc, dec = inp                           # (B,Q,...) one chunk
+        logdec = jnp.log(jnp.maximum(dec, 1e-20))        # (B,Q,nh) fp32
+        cum = jnp.cumsum(logdec, axis=1)                 # inclusive
+        seg = cum[:, :, None, :] - cum[:, None, :, :]    # (B,Qi,Qj,nh)
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bqhn,bkhn->bqkh", Cc, Bc)       # (B,Qi,Qj,nh)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", cb * L.astype(cb.dtype), xdt)
+        # inter-chunk: C_t · decay_from_chunk_start · st
+        dfs = jnp.exp(cum)                               # (B,Q,nh)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp",
+                             Cc * dfs[..., None].astype(Cc.dtype),
+                             st.astype(Cc.dtype))
+        # state update: st' = decay_whole · st + Σ_j decay_to_end_j · B_j x_j
+        dte = jnp.exp(cum[:, -1:, :] - cum)              # (B,Q,nh)
+        contrib = jnp.einsum("bqhn,bqhp->bhpn",
+                             (Bc * dte[..., None].astype(Bc.dtype))
+                             .astype(jnp.float32), xdt.astype(jnp.float32))
+        st = st * jnp.exp(cum[:, -1, :])[..., None, None] + contrib
+        return st, y_intra + y_inter
+
+    final_state, y_c = jax.lax.scan(scan_body, init,
+                                    (xdt_c, Bm_c, Cm_c, decay_c))
+    y = y_c.swapaxes(0, 1).reshape(B, S + pad, nh, s.head_dim)[:, :S]
+    y = y + xh[:, :S] * params["d_skip"][:, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(x.dtype))
+
+    new_conv = jnp.swapaxes(xBC_raw[:, S - (s.conv_width - 1):], 0, 0)
+    return out, {"ssm": final_state, "conv": new_conv}
+
+
+def ssm_decode(params, x, state, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token recurrence. x: (B, 1, d); state from ``init_ssm_state``."""
+    s, d_in, nh = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = jnp.einsum("bd,dk->bk", x[:, 0], params["in_proj"].astype(x.dtype))
+    z, xBC_raw, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC, new_conv = _conv_step(xBC_raw, state["conv"],
+                               params["conv_w"].astype(x.dtype),
+                               params["conv_b"].astype(x.dtype))
+    xh, Bm, Cm, dt, decay = _heads(xBC, dt_raw, params, cfg)   # (B,nh,hd) etc.
+
+    st = state["ssm"]                                    # (B,nh,hd,ds) fp32
+    contrib = jnp.einsum("bhn,bhp->bhpn", Bm.astype(jnp.float32),
+                         (xh * dt[..., None].astype(xh.dtype))
+                         .astype(jnp.float32))
+    st = st * decay[..., None, None] + contrib
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), st)
+    y = y.astype(x.dtype) + xh * params["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(B, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"].astype(x.dtype))
+    return out[:, None], {"ssm": st, "conv": new_conv}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    s, d_in, nh = _dims(cfg)
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return {
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }

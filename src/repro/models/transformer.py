@@ -1,0 +1,600 @@
+"""Unified decoder model over all assigned architecture families.
+
+One parameter tree + three entry points per architecture:
+
+  * ``forward``      — full-sequence (train / prefill), scanned over layers
+  * ``decode_step``  — one token against per-layer caches/states
+  * ``init_cache``   — decode-state construction (KV cache / SSM / xLSTM)
+
+Homogeneous layer stacks are STACKED (leading layer axis) and iterated with
+``lax.scan`` + per-layer ``jax.checkpoint`` (remat) — compile time stays flat
+in depth and activation memory is O(1) layers.  Heterogeneous stacks are
+decomposed into scannable groups:
+
+  dense/vlm/audio : one stack of [attn + MLP] blocks
+  moe             : dense-FFN stack (first ``dense_layers``) + MoE stack
+  hybrid (zamba2) : (groups × attn_every) Mamba2 stack scanned per group with
+                    ONE shared attention+MLP block applied between groups +
+                    a tail stack for the remainder
+  ssm (xlstm)     : groups of (slstm_every−1) mLSTM + 1 sLSTM
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.losses import chunked_weighted_ce, weighted_ce
+from repro.models import attention as attn
+from repro.models import frontends, moe as moe_mod, ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (dense_init, embed, init_embedding, init_mlp,
+                                 mlp, rms_norm)
+from repro.sharding import constrain
+
+
+# ===================================================================== init
+def _stack_init(fn, key, n, *args, **kw):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(k, *args, **kw))(keys)
+
+
+def _init_dense_block(key, cfg: ModelConfig, dtype, d_ff=None):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = attn.init_attention(k1, cfg, dtype)
+    p["mlp"] = init_mlp(k2, cfg.d_model, d_ff or cfg.d_ff, dtype)
+    return p
+
+
+def _init_moe_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = attn.init_attention(k1, cfg, dtype)
+    p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    return p
+
+
+def _init_mamba_block(key, cfg: ModelConfig, dtype):
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "ssm": ssm_mod.init_ssm(key, cfg, dtype)}
+
+
+def _init_mlstm_block(key, cfg: ModelConfig, dtype):
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "inner": xlstm_mod.init_mlstm(key, cfg, dtype)}
+
+
+def _init_slstm_block(key, cfg: ModelConfig, dtype):
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "inner": xlstm_mod.init_slstm(key, cfg, dtype)}
+
+
+def _zamba_split(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, tail) so n_layers = n_groups·attn_every + tail."""
+    g = cfg.n_layers // cfg.attn_every
+    return g, cfg.n_layers - g * cfg.attn_every
+
+
+def _xlstm_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, mlstm_per_group)."""
+    per = cfg.xlstm.slstm_every
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per, per - 1
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    if cfg.arch_type == "audio":
+        p.update(frontends.init_codebook_embeddings(ks[0], cfg, dtype))
+    else:
+        p["embed_tokens"] = init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                           dtype)
+    if cfg.arch_type == "vlm":
+        p["projector"] = frontends.init_projector(ks[1], cfg, dtype)
+
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        p["blocks"] = _stack_init(_init_dense_block, ks[2], cfg.n_layers,
+                                  cfg, dtype)
+    elif cfg.arch_type == "moe":
+        if cfg.dense_layers:
+            p["dense_blocks"] = _stack_init(_init_dense_block, ks[2],
+                                            cfg.dense_layers, cfg, dtype)
+        p["moe_blocks"] = _stack_init(_init_moe_block, ks[3],
+                                      cfg.n_layers - cfg.dense_layers,
+                                      cfg, dtype)
+        if cfg.mtp:
+            k_mtp1, k_mtp2 = jax.random.split(ks[6])
+            p["mtp_proj"] = dense_init(k_mtp1, 2 * cfg.d_model, cfg.d_model,
+                                       dtype=dtype)
+            p["mtp_block"] = _init_dense_block(k_mtp2, cfg, dtype,
+                                               d_ff=cfg.d_ff)
+            p["mtp_ln"] = jnp.ones((cfg.d_model,), dtype)
+    elif cfg.arch_type == "hybrid":
+        g, tail = _zamba_split(cfg)
+        blocks = _stack_init(_init_mamba_block, ks[2], cfg.n_layers, cfg, dtype)
+        p["mamba_groups"] = jax.tree.map(
+            lambda t: t[:g * cfg.attn_every].reshape(g, cfg.attn_every,
+                                                     *t.shape[1:]), blocks)
+        if tail:
+            p["mamba_tail"] = jax.tree.map(lambda t: t[-tail:], blocks)
+        p["shared_attn"] = _init_dense_block(ks[3], cfg, dtype)
+    elif cfg.arch_type == "ssm":                          # xlstm
+        g, per = _xlstm_groups(cfg)
+        p["mlstm_groups"] = jax.tree.map(
+            lambda t: t.reshape(g, per, *t.shape[1:]),
+            _stack_init(_init_mlstm_block, ks[2], g * per, cfg, dtype))
+        p["slstm_blocks"] = _stack_init(_init_slstm_block, ks[3], g,
+                                        cfg, dtype)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.arch_type != "audio" and not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[4], cfg.d_model, cfg.vocab_size,
+                                  scale=cfg.d_model ** -0.5, dtype=dtype)
+    return p
+
+
+# ===================================================================== blocks
+def _dense_block_fwd(p, x, cfg: ModelConfig, *, cache=None, window=0):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_forward(p["attn"], h, cfg, cache=cache,
+                                    window=window)
+    else:
+        a, cache = attn.attention_forward(p["attn"], h, cfg, cache=cache,
+                                          window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp(p["mlp"], h)
+    x = constrain(x, "batch", None, "embed")
+    return x, cache
+
+
+def _dense_block_dec(p, x, cache, pos, cfg: ModelConfig, *, window=0):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg,
+                                   window=window)
+    else:
+        a, cache = attn.attention_decode(p["attn"], h, cache, pos, cfg,
+                                         window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(p["mlp"], h), cache
+
+
+def _moe_block_fwd(p, x, cfg: ModelConfig, *, cache=None, window=0):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_forward(p["attn"], h, cfg, cache=cache,
+                                    window=window)
+    else:
+        a, cache = attn.attention_forward(p["attn"], h, cfg, cache=cache,
+                                          window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff, aux = moe_mod.moe_ffn(p["moe"], h, cfg)
+    x = x + ff
+    x = constrain(x, "batch", None, "embed")
+    return x, cache, aux
+
+
+def _moe_block_dec(p, x, cache, pos, cfg: ModelConfig, *, window=0):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg,
+                                   window=window)
+    else:
+        a, cache = attn.attention_decode(p["attn"], h, cache, pos, cfg,
+                                         window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff, _ = moe_mod.moe_ffn(p["moe"], h, cfg)
+    return x + ff, cache
+
+
+# ===================================================================== embed
+def _embed_input(params, batch, cfg: ModelConfig, dtype):
+    """Returns (x (B,S,d), label_mask or None)."""
+    if cfg.arch_type == "audio":
+        x = frontends.embed_codes(params, batch["tokens"], dtype)
+        return x, None
+    x = embed(params["embed_tokens"], batch["tokens"], dtype)
+    if cfg.arch_type == "vlm" and "media" in batch:
+        # media patch embeddings are PREPENDED: seq = n_media + n_text.
+        # The data pipeline supplies tokens of length (seq_len - n_media).
+        m = frontends.project_media(params["projector"], batch["media"], dtype)
+        n_media, n_text = m.shape[1], x.shape[1]
+        x = jnp.concatenate([m, x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((x.shape[0], n_media), bool),
+             jnp.ones((x.shape[0], n_text), bool)], axis=1)
+        return x, mask
+    return x, None
+
+
+def _lm_logits(params, h, cfg: ModelConfig):
+    if cfg.arch_type == "audio":
+        return frontends.codebook_logits(params, h)      # (B,K,S,V)
+    w = (params["embed_tokens"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(h.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    return constrain(logits, "batch", None, "act_vocab")
+
+
+# ===================================================================== forward
+def forward(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+            window: Optional[int] = None, caches=None, remat: bool = True):
+    """Full-sequence pass. Returns (logits, aux_loss, new_caches).
+
+    ``caches`` (optional) are per-layer decode caches to fill (prefill mode);
+    pass ``init_cache(...)`` trees.  ``window`` overrides cfg.sliding_window.
+    """
+    window = cfg.sliding_window if window is None else window
+    x, media_mask = _embed_input(params, batch, cfg, dtype)
+    x = constrain(x, "batch", None, "embed")
+    aux_total = jnp.zeros((), jnp.float32)
+    fill = caches is not None
+
+    def maybe_remat(f):
+        return jax.checkpoint(f) if remat else f
+
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        def body(carry, layer):
+            xc, _ = carry
+            p, c = layer
+
+            def blk(xc, p, c):
+                return _dense_block_fwd(p, xc, cfg,
+                                        cache=c if fill else None,
+                                        window=window)
+            xc, c = maybe_remat(blk)(xc, p, c)
+            return (xc, jnp.zeros((), jnp.float32)), c
+        cs = caches if fill else _dummy_caches(cfg, params["blocks"])
+        (x, _), new_caches = jax.lax.scan(body, (x, aux_total),
+                                          (params["blocks"], cs))
+        new_caches = new_caches if fill else None
+
+    elif cfg.arch_type == "moe":
+        new_caches = {"dense": None, "moe": None}
+        if cfg.dense_layers:
+            def body_d(carry, layer):
+                xc = carry
+                p, c = layer
+
+                def blk(xc, p, c):
+                    return _dense_block_fwd(p, xc, cfg,
+                                            cache=c if fill else None,
+                                            window=window)
+                xc, c = maybe_remat(blk)(xc, p, c)
+                return xc, c
+            cs = caches["dense"] if fill else _dummy_caches(
+                cfg, params["dense_blocks"])
+            x, nc = jax.lax.scan(body_d, x, (params["dense_blocks"], cs))
+            new_caches["dense"] = nc if fill else None
+
+        def body_m(carry, layer):
+            xc, aux = carry
+            p, c = layer
+
+            def blk(xc, p, c):
+                return _moe_block_fwd(p, xc, cfg, cache=c if fill else None,
+                                      window=window)
+            xc, c, a = maybe_remat(blk)(xc, p, c)
+            return (xc, aux + a), c
+        cs = caches["moe"] if fill else _dummy_caches(cfg, params["moe_blocks"])
+        (x, aux_total), nc = jax.lax.scan(body_m, (x, aux_total),
+                                          (params["moe_blocks"], cs))
+        new_caches["moe"] = nc if fill else None
+        if not fill:
+            new_caches = None
+
+    elif cfg.arch_type == "hybrid":
+        g, tail = _zamba_split(cfg)
+
+        def mamba_one(xc, p):
+            def blk(xc, p):
+                h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+                o, st = ssm_mod.ssm_forward(p["ssm"], h, cfg, state=None)
+                return constrain(xc + o, "batch", None, "embed"), st
+            return maybe_remat(blk)(xc, p)
+
+        def group_body(carry, layer):
+            xc = carry
+            pg, sc = layer                               # (attn_every,) + cache
+            xc, st = jax.lax.scan(mamba_one, xc, pg)
+
+            def shared(xc, sc):
+                return _dense_block_fwd(params["shared_attn"], xc, cfg,
+                                        cache=sc if fill else None,
+                                        window=window)
+            xc, sc = maybe_remat(shared)(xc, sc)
+            return xc, (st, sc)
+
+        sc0 = (caches["shared"] if fill
+               else _dummy_caches(cfg, params["mamba_groups"]))
+        x, (group_states, shared_caches) = jax.lax.scan(
+            group_body, x, (params["mamba_groups"], sc0))
+        tail_states = None
+        if tail:
+            x, tail_states = jax.lax.scan(mamba_one, x, params["mamba_tail"])
+        new_caches = ({"groups": group_states, "tail": tail_states,
+                       "shared": shared_caches} if fill else None)
+
+    elif cfg.arch_type == "ssm":                          # xlstm
+        g, per = _xlstm_groups(cfg)
+        B = x.shape[0]
+
+        def mlstm_one(carry, p):
+            xc = carry
+
+            def blk(xc, p):
+                h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+                o, st = xlstm_mod.mlstm_forward(p["inner"], h, cfg)
+                return constrain(xc + o, "batch", None, "embed"), st
+            xc, st = maybe_remat(blk)(xc, p)
+            return xc, st
+
+        def group_body(carry, layer):
+            xc = carry
+            pm, ps = layer
+            xc, m_st = jax.lax.scan(mlstm_one, xc, pm)
+
+            def sblk(xc, ps):
+                h = rms_norm(xc, ps["ln1"], cfg.norm_eps)
+                o, st = xlstm_mod.slstm_forward(ps["inner"], h, cfg)
+                return constrain(xc + o, "batch", None, "embed"), st
+            xc, s_st = maybe_remat(sblk)(xc, ps)
+            return xc, (m_st, s_st)
+
+        x, states = jax.lax.scan(group_body, x,
+                                 (params["mlstm_groups"],
+                                  params["slstm_blocks"]))
+        new_caches = states if fill else None
+    else:
+        raise ValueError(cfg.arch_type)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    h = constrain(h, "batch", None, "embed")
+    logits = _lm_logits(params, h, cfg)
+    return logits, aux_total, (new_caches, h, media_mask)
+
+
+def _dummy_caches(cfg, stacked_blocks):
+    """Zero-size scan companion when no cache is being filled."""
+    n = jax.tree.leaves(stacked_blocks)[0].shape[0]
+    return jnp.zeros((n, 0), jnp.int32)
+
+
+# ===================================================================== train
+def make_train_step(cfg: ModelConfig, optimizer, *, beta: float = 1.0,
+                    dtype=jnp.bfloat16, remat: bool = True,
+                    microbatches: int = 1, accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch, lr) -> (params, opt_state,
+    metrics).  ``beta`` is the EW loss exponent (paper's EW-MSE transferred to
+    position-weighted CE; beta=1 == plain CE).
+
+    ``microbatches`` > 1 enables gradient accumulation: the global batch is
+    split on its leading axis and scanned — peak activation memory scales
+    with the microbatch, not the global batch.  ``accum_dtype`` controls the
+    gradient-accumulator precision: fp32 by default; bf16 halves optimizer-
+    path memory for the 671B fit (precision trade recorded in DESIGN.md).
+    """
+    def loss_fn(params, batch):
+        # the full-logits output of forward() is unused here (the chunked CE
+        # recomputes per-chunk logits from h) — XLA dead-code-eliminates it
+        _, aux, (_, h, media_mask) = forward(params, batch, cfg,
+                                             dtype=dtype, remat=remat)
+        if cfg.arch_type == "audio":
+            K = cfg.frontend.n_codebooks
+            lbl = batch["labels"]                        # (B,K,S)
+            ce = sum(chunked_weighted_ce(h, params["cb_heads"][:, k, :],
+                                         lbl[:, k], beta)
+                     for k in range(K)) / K
+        else:
+            w_head = (params["embed_tokens"].T if cfg.tie_embeddings
+                      else params["lm_head"])
+            ce = chunked_weighted_ce(h, w_head, batch["labels"], beta,
+                                     media_mask)
+        loss = ce + aux
+        if cfg.mtp:
+            loss = loss + 0.3 * _mtp_loss(params, h, batch, cfg, beta)
+        return loss, {"ce": ce, "aux": aux}
+
+    def train_step(params, opt_state, batch, lr):
+        if microbatches > 1:
+            def split(t):
+                m = t.reshape(microbatches, t.shape[0] // microbatches,
+                              *t.shape[1:])
+                # keep each microbatch batch-sharded (the raw reshape of a
+                # data-sharded leading axis would force SPMD to replicate)
+                return constrain(m, None, "batch", *((None,) * (t.ndim - 1)))
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(gsum, mbatch):
+                (l, parts), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gsum, g)
+                return gsum, (l, parts)
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+            gsum, (losses, partss) = jax.lax.scan(acc_body, g0, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = jnp.mean(losses)
+            parts = jax.tree.map(jnp.mean, partss)
+        else:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              params, updates)
+        return params, opt_state, {"loss": loss, **parts}
+
+    return train_step
+
+
+def _mtp_loss(params, h, batch, cfg: ModelConfig, beta: float):
+    """DeepSeek-V3 multi-token prediction: one extra block predicts t+2.
+
+    h'_t = W_proj [RMSNorm(h_t); RMSNorm(Emb(label_t))] → block → head.
+    """
+    lbl = batch["labels"]
+    emb = embed(params["embed_tokens"], lbl, h.dtype)     # token t+1 stream
+    emb = constrain(emb, "batch", None, "embed")
+    cat = jnp.concatenate([rms_norm(h, params["mtp_ln"], cfg.norm_eps),
+                           rms_norm(emb, params["mtp_ln"], cfg.norm_eps)], -1)
+    x = jnp.einsum("bsk,kd->bsd", cat, params["mtp_proj"].astype(h.dtype))
+    x = constrain(x, "batch", None, "embed")
+    x, _ = _dense_block_fwd(params["mtp_block"], x, cfg)
+    h2 = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    h2 = constrain(h2, "batch", None, "embed")
+    # labels for t+2: shift labels left by one; mask the last position
+    lbl2 = jnp.concatenate([lbl[:, 1:], lbl[:, -1:]], axis=1)
+    mask = jnp.concatenate([jnp.ones_like(lbl[:, 1:], dtype=bool),
+                            jnp.zeros_like(lbl[:, -1:], dtype=bool)], axis=1)
+    w_head = (params["embed_tokens"].T if cfg.tie_embeddings
+              else params["lm_head"])
+    return chunked_weighted_ce(h2, w_head, lbl2, beta, mask)
+
+
+# ===================================================================== decode
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=jnp.bfloat16):
+    """Per-layer decode caches, stacked to match the layer-scan layout."""
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        one = (attn.init_mla_cache if cfg.mla is not None
+               else attn.init_kv_cache)(cfg, batch, capacity, dtype)
+        return _stack_tree(one, cfg.n_layers)
+    if cfg.arch_type == "moe":
+        one = (attn.init_mla_cache if cfg.mla is not None
+               else attn.init_kv_cache)(cfg, batch, capacity, dtype)
+        out = {"moe": _stack_tree(one, cfg.n_layers - cfg.dense_layers)}
+        out["dense"] = (_stack_tree(one, cfg.dense_layers)
+                        if cfg.dense_layers else None)
+        return out
+    if cfg.arch_type == "hybrid":
+        g, tail = _zamba_split(cfg)
+        st = ssm_mod.init_ssm_state(cfg, batch, dtype)
+        # the SHARED attention block runs g times per token with different
+        # inputs, so it needs one KV cache per invocation
+        return {"groups": _stack_tree(_stack_tree(st, cfg.attn_every), g),
+                "tail": _stack_tree(st, tail) if tail else None,
+                "shared": _stack_tree(
+                    attn.init_kv_cache(cfg, batch, capacity, dtype), g),
+                }
+    if cfg.arch_type == "ssm":
+        g, per = _xlstm_groups(cfg)
+        m = xlstm_mod.init_mlstm_state(cfg, batch)
+        s = xlstm_mod.init_slstm_state(cfg, batch)
+        return (_stack_tree(_stack_tree(m, per), g), _stack_tree(s, g))
+    raise ValueError(cfg.arch_type)
+
+
+def _stack_tree(tree, n):
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy()
+        if n else None, tree)
+
+
+def decode_step(params, caches, batch, pos, cfg: ModelConfig, *,
+                dtype=jnp.bfloat16, window: Optional[int] = None):
+    """One-token decode. batch["tokens"]: (B,1) (audio: (B,K,1)).
+
+    ``pos`` — number of tokens already in the cache (scalar int32).
+    Returns (logits for the new token, new caches).
+    """
+    window = cfg.sliding_window if window is None else window
+    x, _ = _embed_input(params, batch, cfg, dtype)
+
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        def body(xc, layer):
+            p, c = layer
+            xc, c = _dense_block_dec(p, xc, c, pos, cfg, window=window)
+            return xc, c
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+
+    elif cfg.arch_type == "moe":
+        new_caches = {"dense": None, "moe": None}
+        if cfg.dense_layers:
+            def body_d(xc, layer):
+                p, c = layer
+                xc, c = _dense_block_dec(p, xc, c, pos, cfg, window=window)
+                return xc, c
+            x, nc = jax.lax.scan(body_d, x,
+                                 (params["dense_blocks"], caches["dense"]))
+            new_caches["dense"] = nc
+
+        def body_m(xc, layer):
+            p, c = layer
+            xc, c = _moe_block_dec(p, xc, c, pos, cfg, window=window)
+            return xc, c
+        x, nc = jax.lax.scan(body_m, x, (params["moe_blocks"], caches["moe"]))
+        new_caches["moe"] = nc
+
+    elif cfg.arch_type == "hybrid":
+        def mamba_one(xc, layer):
+            p, st = layer
+            h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+            o, st = ssm_mod.ssm_decode(p["ssm"], h, st, cfg)
+            return xc + o, st
+
+        def group_body(xc, layer):
+            pg, stg, sc = layer
+            xc, st = jax.lax.scan(mamba_one, xc, (pg, stg))
+            xc, sc = _dense_block_dec(params["shared_attn"], xc, sc, pos,
+                                      cfg, window=window)
+            return xc, (st, sc)
+
+        x, (g_states, shared_caches) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"], caches["groups"], caches["shared"]))
+        t_states = None
+        if caches["tail"] is not None:
+            x, t_states = jax.lax.scan(mamba_one, x,
+                                       (params["mamba_tail"], caches["tail"]))
+        new_caches = {"groups": g_states, "tail": t_states,
+                      "shared": shared_caches}
+
+    elif cfg.arch_type == "ssm":
+        m_caches, s_caches = caches
+
+        def mlstm_one(xc, layer):
+            p, st = layer
+            h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+            o, st = xlstm_mod.mlstm_decode(p["inner"], h, st, cfg)
+            return xc + o, st
+
+        def group_body(xc, layer):
+            (pm, ps), (ms, ss) = layer
+            xc, mst = jax.lax.scan(mlstm_one, xc, (pm, ms))
+            h = rms_norm(xc, ps["ln1"], cfg.norm_eps)
+            o, sst = xlstm_mod.slstm_decode(ps["inner"], h, ss, cfg)
+            return xc + o, (mst, sst)
+
+        x, states = jax.lax.scan(
+            group_body, x,
+            ((params["mlstm_groups"], params["slstm_blocks"]),
+             (m_caches, s_caches)))
+        new_caches = states
+    else:
+        raise ValueError(cfg.arch_type)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_logits(params, h, cfg)
+    return logits, new_caches

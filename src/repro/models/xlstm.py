@@ -1,0 +1,262 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, true recurrence) — the 7:1 mix of xlstm-1.3b.
+
+mLSTM cell:   C_t = f_t C_{t-1} + i_t v_t k_tᵀ ;  n_t = f_t n_{t-1} + i_t k_t
+              h_t = o_t ⊙ (q_tᵀC_t) / max(|q_t·n_t|, 1)
+with f = σ(f̃) and i = exp(ĩ) (clamped; the full max-stabilizer of the paper
+is used in the sLSTM and in mLSTM decode; the chunkwise-parallel train path
+uses the clamped-exponent form — recorded in DESIGN.md).  Training/prefill
+runs the chunkwise algorithm (same algebra as SSD + a normalizer row), decode
+the plain recurrence.  This is the same cell family as the reproduced paper's
+forecaster — the fused Pallas LSTM cell in ``repro.kernels`` is the TPU
+realization of the recurrent path.
+
+sLSTM cell (per head, block-diagonal recurrence):
+  m_t = max(f̃ + m_{t-1}, ĩ);  c_t = e^{f̃+m_{t-1}-m_t} c + e^{ĩ-m_t} tanh(z̃)
+  n_t likewise;  h_t = σ(õ) · c_t / n_t
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding import constrain
+
+ICLAMP = 8.0       # clamp on the exponential input gate pre-activation
+
+
+def _mdims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_m = int(x.mlstm_proj_factor * cfg.d_model)
+    nh = max(1, d_m // x.mlstm_head_dim)
+    hd = d_m // nh
+    return x, d_m, nh, hd
+
+
+# ===================================================================== mLSTM
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    x, d_m, nh, hd = _mdims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_m, dtype=dtype),
+        "wq": dense_init(ks[1], d_m, d_m, dtype=dtype),
+        "wk": dense_init(ks[2], d_m, d_m, dtype=dtype),
+        "wv": dense_init(ks[3], d_m, d_m, dtype=dtype),
+        "w_gates": dense_init(ks[4], d_m, 2 * nh, dtype=jnp.float32),
+        "b_gates": jnp.concatenate([jnp.zeros((nh,)),                 # ĩ
+                                    jnp.full((nh,), 3.0)]).astype(jnp.float32),
+        "ogate": dense_init(ks[5], d_m, d_m, dtype=dtype),
+        "norm_w": jnp.ones((d_m,), dtype),
+        "down_proj": dense_init(ks[6], d_m, d, scale=d_m ** -0.5, dtype=dtype),
+    }
+
+
+def _mlstm_qkvg(params, a, cfg):
+    x, d_m, nh, hd = _mdims(cfg)
+    shp = a.shape[:-1]
+    q = (a @ params["wq"].astype(a.dtype)).reshape(*shp, nh, hd)
+    k = (a @ params["wk"].astype(a.dtype)).reshape(*shp, nh, hd) * hd ** -0.5
+    v = (a @ params["wv"].astype(a.dtype)).reshape(*shp, nh, hd)
+    gates = a.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+    i_raw = jnp.minimum(gates[..., :nh], ICLAMP)
+    logf = -jax.nn.softplus(-gates[..., nh:])            # log σ(f̃)
+    o = jax.nn.sigmoid(a @ params["ogate"].astype(a.dtype))
+    return q, k, v, i_raw, logf, o
+
+
+def mlstm_forward(params, xin, cfg: ModelConfig, *, state=None
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, d) -> (B, S, d). Chunkwise-parallel mLSTM."""
+    x, d_m, nh, hd = _mdims(cfg)
+    B, S, _ = xin.shape
+    Q = min(x.chunk_size, S)
+    pad = (-S) % Q
+    nc = (S + pad) // Q
+
+    u = jnp.einsum("bsd,dk->bsk", xin, params["up_proj"].astype(xin.dtype))
+    a, b = u[..., :d_m], u[..., d_m:]
+    q, k, v, i_raw, logf, o = _mlstm_qkvg(params, a, cfg)
+    q = constrain(q, "batch", None, "act_heads", None)
+    if pad:
+        # identity padding: f=1 (logf=0), i=exp(-inf)=0 contribution
+        pz = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = map(pz, (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e9)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+    ch = lambda t: t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+    q_c, k_c, v_c, i_c, lf_c = map(ch, (q, k, v, i_raw, logf))
+
+    if state is None:
+        C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    else:
+        C0, n0 = state["C"], state["n"]
+    iq = jnp.arange(Q)
+    causal = iq[:, None] >= iq[None, :]
+
+    def body(carry, inp):
+        C, n = carry
+        qc, kc, vc, ic, lfc = inp                        # (B,Q,...)
+        cum = jnp.cumsum(lfc, axis=1)                    # (B,Q,nh)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]
+        w = jnp.where(causal[None, :, :, None],
+                      jnp.exp(seg + ic[:, None, :, :]), 0.0)   # (B,Qi,Qj,nh)
+        qk = jnp.einsum("bqhe,bjhe->bqjh", qc, kc)
+        aw = (qk.astype(jnp.float32) * w)
+        num_intra = jnp.einsum("bqjh,bjhe->bqhe", aw.astype(vc.dtype), vc)
+        den_intra = jnp.sum(aw, axis=2)                  # Σ_j w_qj (q·k_j)
+        dfs = jnp.exp(cum)                               # decay from chunk start
+        qd = qc * dfs[..., None].astype(qc.dtype)
+        num_inter = jnp.einsum("bqhe,bhef->bqhf", qd, C.astype(qc.dtype))
+        den_inter = jnp.einsum("bqhe,bhe->bqh", qd, n.astype(qc.dtype))
+        num = num_intra + num_inter
+        den = den_intra.astype(jnp.float32) + den_inter
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None].astype(num.dtype)
+        # state update
+        dte = jnp.exp(cum[:, -1:, :] - cum + ic)         # (B,Q,nh)
+        kw = kc * dte[..., None].astype(kc.dtype)
+        C = C * jnp.exp(cum[:, -1])[..., None, None] + \
+            jnp.einsum("bqhe,bqhf->bhef", kw, vc).astype(jnp.float32)
+        n = n * jnp.exp(cum[:, -1])[..., None] + \
+            jnp.sum(kw, axis=1).astype(jnp.float32)
+        return (C, n), h
+
+    (Cf, nf), h_c = jax.lax.scan(body, (C0, n0), (q_c, k_c, v_c, i_c, lf_c))
+    h = h_c.swapaxes(0, 1).reshape(B, S + pad, d_m)[:, :S] * o
+    h = rms_norm(h, params["norm_w"], cfg.norm_eps)
+    h = h * jax.nn.silu(b)
+    out = jnp.einsum("bsk,kd->bsd", h, params["down_proj"].astype(xin.dtype))
+    return out, {"C": Cf, "n": nf}
+
+
+def mlstm_decode(params, xin, state, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent mLSTM. xin: (B, 1, d)."""
+    x, d_m, nh, hd = _mdims(cfg)
+    B = xin.shape[0]
+    u = jnp.einsum("bd,dk->bk", xin[:, 0], params["up_proj"].astype(xin.dtype))
+    a, b = u[..., :d_m], u[..., d_m:]
+    q, k, v, i_raw, logf, o = _mlstm_qkvg(params, a, cfg)  # (B,nh,hd) etc.
+    i_w = jnp.exp(i_raw)                                 # (B,nh)
+    f_w = jnp.exp(logf)
+    C = state["C"] * f_w[..., None, None] + \
+        jnp.einsum("bhe,bhf->bhef", (k * i_w[..., None].astype(k.dtype))
+                   .astype(jnp.float32), v.astype(jnp.float32))
+    n = state["n"] * f_w[..., None] + \
+        (k * i_w[..., None].astype(k.dtype)).astype(jnp.float32)
+    num = jnp.einsum("bhe,bhef->bhf", q.astype(jnp.float32), C)
+    den = jnp.einsum("bhe,bhe->bh", q.astype(jnp.float32), n)
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).astype(xin.dtype)
+    h = h.reshape(B, d_m) * o
+    h = rms_norm(h, params["norm_w"], cfg.norm_eps)
+    h = h * jax.nn.silu(b)
+    out = jnp.einsum("bk,kd->bd", h, params["down_proj"].astype(xin.dtype))
+    return out[:, None], {"C": C, "n": n}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    x, d_m, nh, hd = _mdims(cfg)
+    return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32)}
+
+
+# ===================================================================== sLSTM
+def _sdims(cfg: ModelConfig):
+    x = cfg.xlstm
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    d_ff = int(x.slstm_proj_factor * cfg.d_model)
+    return x, nh, hd, d_ff
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    x, nh, hd, d_ff = _sdims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, dtype=dtype),
+        # block-diagonal recurrence: per-head (hd, 4*hd)
+        "r": (jax.random.normal(ks[1], (nh, hd, 4 * hd), jnp.float32)
+              * hd ** -0.5).astype(dtype),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm_w": jnp.ones((d,), dtype),
+        "up_proj": dense_init(ks[2], d, 2 * d_ff, dtype=dtype),
+        "down_proj": dense_init(ks[3], d_ff, d, scale=d_ff ** -0.5, dtype=dtype),
+    }
+
+
+def _slstm_step(params, x_t, state, cfg: ModelConfig):
+    """x_t: (B, d) pre-computed Wx·x_t; state: dict of (B, nh, hd)."""
+    x, nh, hd, _ = _sdims(cfg)
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhe,hek->bhk", h.astype(x_t.dtype),
+                     params["r"].astype(x_t.dtype))      # (B,nh,4*hd)
+    # wx output layout: [ĩ(d) | f̃(d) | z̃(d) | õ(d)]; regroup to per-head
+    # (B, nh, 4*hd) matching the recurrent block-diagonal layout
+    z = x_t.reshape(-1, 4, nh, hd).transpose(0, 2, 1, 3).reshape(-1, nh, 4 * hd)
+    bias = params["b"].reshape(4, nh, hd).transpose(1, 0, 2).reshape(nh, 4 * hd)
+    pre = (z + rec).astype(jnp.float32) + bias
+    i_t = pre[..., :hd]
+    f_t = pre[..., hd:2 * hd]
+    z_t = jnp.tanh(pre[..., 2 * hd:3 * hd])
+    o_t = jax.nn.sigmoid(pre[..., 3 * hd:])
+    logf = -jax.nn.softplus(-f_t)                        # log σ(f̃)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_w = jnp.exp(i_t - m_new)
+    f_w = jnp.exp(logf + m - m_new)
+    c = f_w * c + i_w * z_t
+    n = f_w * n + i_w
+    h_new = o_t * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h_new.astype(h.dtype), "m": m_new}
+
+
+def slstm_forward(params, xin, cfg: ModelConfig, *, state=None
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, d) -> (B, S, d). True recurrent scan (not parallelizable)."""
+    x, nh, hd, d_ff = _sdims(cfg)
+    B, S, d = xin.shape
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    xw = jnp.einsum("bsd,dk->bsk", xin, params["wx"].astype(xin.dtype))
+
+    def step(st, x_t):
+        st = _slstm_step(params, x_t, st, cfg)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, state, xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(xin.dtype)
+    h = rms_norm(h, params["norm_w"], cfg.norm_eps)
+    u = jnp.einsum("bsd,dk->bsk", h, params["up_proj"].astype(xin.dtype))
+    a, g = jnp.split(u, 2, axis=-1)
+    out = jnp.einsum("bsk,kd->bsd", a * jax.nn.gelu(g),
+                     params["down_proj"].astype(xin.dtype))
+    return out, state
+
+
+def slstm_decode(params, xin, state, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    x, nh, hd, d_ff = _sdims(cfg)
+    B = xin.shape[0]
+    xw = jnp.einsum("bd,dk->bk", xin[:, 0], params["wx"].astype(xin.dtype))
+    state = _slstm_step(params, xw, state, cfg)
+    h = state["h"].reshape(B, -1).astype(xin.dtype)
+    h = rms_norm(h, params["norm_w"], cfg.norm_eps)
+    u = jnp.einsum("bd,dk->bk", h, params["up_proj"].astype(xin.dtype))
+    a, g = jnp.split(u, 2, axis=-1)
+    out = jnp.einsum("bk,kd->bd", a * jax.nn.gelu(g),
+                     params["down_proj"].astype(xin.dtype))
+    return out[:, None], state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    x, nh, hd, _ = _sdims(cfg)
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, nh, hd), -1e9, jnp.float32)}

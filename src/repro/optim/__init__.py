@@ -1,0 +1,6 @@
+from repro.optim.sgd import sgd
+from repro.optim.adam import adam, adamw
+from repro.optim.factored import adafactor
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = ["sgd", "adam", "adamw", "adafactor", "constant", "warmup_cosine"]

@@ -1,0 +1,39 @@
+"""Adam / AdamW with fp32 state regardless of param dtype."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import Optimizer
+
+
+def adam(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return (jax.tree.map(zeros, params), jax.tree.map(zeros, params),
+                jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        m, v, t = state
+        t = t + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, g32)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, g32)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(mm, vv, p):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        return jax.tree.map(upd, m, v, params), (m, v, t)
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return adam(b1, b2, eps, weight_decay)

@@ -1,0 +1,64 @@
+"""Adafactor-style factored second moment.
+
+For the 671B fit on a 16 GB/chip v5e pod the optimizer state must be sub-
+linear in parameters per matrix: the second moment of an (n, m) matrix is
+stored as row/col factors (n,) + (m,) instead of (n, m), and there is no fp32
+master copy (updates are applied in the param dtype).  Vectors fall back to a
+full second moment.  First moment is optional (off by default, as Adafactor).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import Optimizer
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.99) -> Optimizer:
+    def init(params):
+        def factor(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], jnp.float32),      # row factor
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return (jnp.zeros(p.shape, jnp.float32), None)
+        return (jax.tree.map(factor, params,
+                             is_leaf=lambda x: isinstance(x, jax.Array)),
+                jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        factors, t = state
+        t = t + 1
+
+        def upd(g, f, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if p.ndim >= 2:
+                vr, vc = f
+                vr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)
+                                       [..., None], eps))
+                u = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nf = (vr, vc)
+            else:
+                v, _ = f
+                v = decay * v + (1 - decay) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                nf = (v, None)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), nf
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_f = tdef.flatten_up_to(factors)
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_f = tdef.unflatten([o[1] for o in outs])
+        return updates, (new_f, t)
+
+    return Optimizer(init, update)

@@ -1,0 +1,33 @@
+"""SGD (+momentum) — the paper's client-side optimizer (Alg. 1)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable           # (grads, state, params, lr) -> (updates, state)
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return (jax.tree.map(jnp.zeros_like, params),)
+
+    def update(grads, state, params, lr):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), ()
+        (m,) = state
+        m = jax.tree.map(lambda mm, g: momentum * mm + g, m, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda mm, g: momentum * mm + g, m, grads)
+        else:
+            upd = m
+        return jax.tree.map(lambda u: -lr * u, upd), (m,)
+
+    return Optimizer(init, update)

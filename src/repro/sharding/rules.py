@@ -1,0 +1,226 @@
+"""Logical-axis sharding rules.
+
+Model code calls ``constrain(x, "batch", "seq", "embed")`` with *logical* axis
+names; the active :class:`ShardingRules` (installed by the launcher via
+``use_rules``) maps them to mesh axes.  With no rules installed every call is a
+no-op, so the same model code runs on a laptop and on a 512-chip mesh.
+
+Parameter shardings are derived from the param-tree *paths* via
+``param_pspec`` — a name/ndim-based rule table in the spirit of MaxText's
+logical-to-physical rules, kept in one place so performance iterations can
+change the sharding layout without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class ShardingRules:
+    """Maps logical axis names -> mesh axis (or None)."""
+
+    def __init__(self, mesh, logical_to_mesh=None, fsdp_axis="data",
+                 tensor_axis="model", data_axes=("data",), pod_axis=None,
+                 shard_batch=True, shard_activations=False):
+        self.mesh = mesh
+        self.fsdp_axis = fsdp_axis
+        self.tensor_axis = tensor_axis
+        self.pod_axis = pod_axis
+        self.shard_activations = shard_activations
+        if not shard_batch:                  # e.g. global_batch=1 long-context
+            data_axes, pod_axis = (), None
+        # data-parallel axes for the *batch* dimension of activations.  On the
+        # multi-pod mesh the pod axis is also data-parallel.
+        batch_axes = tuple(a for a in ((pod_axis,) if pod_axis else ()) + tuple(data_axes))
+        self.logical = {
+            "batch": batch_axes if batch_axes else None,
+            "seq": None,
+            "cache_seq": tensor_axis,      # sequence-sharded KV cache (see DESIGN §5)
+            # residual-stream activations optionally shard d_model over the
+            # tensor axis ("activation FSDP"): the remat-saved per-layer x is
+            # 16× smaller at the cost of one all-gather per layer per pass.
+            # Worth it only when activations would not fit (≳30B training);
+            # for small models it makes the step collective-bound (§Perf).
+            "embed": tensor_axis if shard_activations else None,
+            "act_ff": tensor_axis,         # activation hidden/ffn dim under TP
+            "act_heads": tensor_axis,
+            "act_vocab": tensor_axis,      # sharded logits
+            # routing groups shard over the DATA axes only: the (B,S)→(G,gsz)
+            # reshape then never resharding across `model`, whose backward
+            # fallback replicated a full f32 cotangent per MoE layer (§Perf)
+            "moe_group": batch_axes if batch_axes else None,
+            "moe_batch": batch_axes if batch_axes else None,
+            "act_experts": tensor_axis,
+            "clients": batch_axes if batch_axes else None,
+        }
+        if logical_to_mesh:
+            self.logical.update(logical_to_mesh)
+
+    # -------------------------------------------------------- params
+    def param_pspec(self, path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        """Sharding for one parameter, by its tree path.
+
+        Layout: FSDP over ``fsdp_axis`` on the largest "row" dim, tensor
+        parallel over ``tensor_axis`` on head/ffn/expert/vocab dims.  A leading
+        layer-stack axis (from scanned segments) is never sharded.
+        """
+        name = path[-1]
+        fsdp, tp = self.fsdp_axis, self.tensor_axis
+        ndim = len(shape)
+
+        def spec(*axes):
+            # pad to ndim with None on the left for the layer-stack axis
+            pad = ndim - len(axes)
+            return P(*((None,) * pad + tuple(axes)))
+
+        if name in ("embed_tokens",):            # (vocab, d)
+            return spec(tp, fsdp)
+        if name == "cb_embed":                   # (K, vocab, d)
+            return P(None, tp, fsdp)
+        if name == "cb_heads":                   # (d, K, vocab)
+            return P(fsdp, None, tp)
+        if name in ("lm_head",):                 # (d, vocab)
+            return spec(fsdp, tp)
+        if name in ("wq", "wk", "wv", "w_in", "w_gate", "wq_up", "wkv_up"):
+            return spec(fsdp, tp)                # (d, heads*hd) / (d, ff)
+        if name in ("wo", "w_out"):              # (heads*hd, d) / (ff, d)
+            return spec(tp, fsdp)
+        if name in ("moe_w_in", "moe_w_gate"):   # (E, d, ff_e)
+            return spec(tp, fsdp, None)
+        if name in ("moe_w_out",):               # (E, ff_e, d)
+            return spec(tp, None, fsdp)
+        if name == "router":                     # (d, E)
+            return spec(fsdp, None)
+        if name in ("in_proj", "x_proj", "up_proj"):
+            return spec(fsdp, tp)
+        if name in ("out_proj", "down_proj"):
+            return spec(tp, fsdp)
+        if ndim >= 2 and shape[-1] >= 1024 and shape[-2] >= 1024:
+            return spec(fsdp, tp)                # generic big matrix
+        return spec(*((None,) * ndim))           # small params replicated
+
+    def pspec_tree(self, params):
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        treedef = jax.tree_util.tree_structure(params)
+        specs = []
+        for kp, leaf in flat:
+            path = tuple(_key_name(k) for k in kp)
+            specs.append(safe_spec(leaf.shape,
+                                   self.param_pspec(path, leaf.shape),
+                                   self.mesh))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def sharding_tree(self, params):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.pspec_tree(params),
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# ------------------------------------------------------------------ context
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+def _sharding_mesh(mesh):
+    """Use the context abstract mesh when one is active (e.g. inside a
+    shard_map body, where the pod axis is Manual) so sharding constraints
+    carry matching axis types."""
+    try:
+        from jax.sharding import get_abstract_mesh
+        am = get_abstract_mesh()
+        if am is not None and am.axis_names:
+            return am
+    except ImportError:
+        pass
+    return mesh
+
+
+def _axis_size(mesh, m) -> int:
+    if m is None:
+        return 1
+    if isinstance(m, tuple):
+        n = 1
+        for a in m:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[m]
+
+
+def safe_spec(shape, spec: P, mesh) -> P:
+    """Drop mesh axes whose size does not divide the tensor dim (e.g. 56 query
+    heads on a 16-way tensor axis) — the constraint silently degrades to
+    replicated on that dim instead of failing to lower."""
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, m in zip(shape, axes):
+        sz = _axis_size(mesh, m)
+        out.append(m if sz > 1 and dim % sz == 0 else
+                   (m if sz == 1 else None))
+    return P(*out)
+
+
+def constrain_heads(x, head_axis: int = 2):
+    """Constraint for (B, S, H, hd) attention activations.
+
+    When H divides the tensor axis, shard heads; otherwise fall back to
+    sharding hd (head_dim is 64/128/112 — usually divisible) so attention
+    activations NEVER go fully replicated (a replicated primal here makes
+    GSPMD replicate the f32 cotangent in the backward pass — the dominant
+    collective cost for archs whose head count isn't a multiple of 16).
+    """
+    rules = active_rules()
+    if rules is None:
+        return x
+    tp = rules.tensor_axis
+    sz = _axis_size(rules.mesh, tp)
+    axes = [None] * x.ndim
+    batch = rules.logical.get("batch")
+    if batch is not None and x.shape[0] % _axis_size(rules.mesh, batch) == 0:
+        axes[0] = batch
+    if x.shape[head_axis] % sz == 0:
+        axes[head_axis] = tp
+    # NOTE: do NOT fall back to sharding hd — it is the contraction dim of
+    # the score matmul and sharding it turns every score tensor into an
+    # all-reduced partial sum (measured 3.7× collective regression; §Perf)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_sharding_mesh(rules.mesh), P(*axes)))
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Apply a sharding constraint by logical axis names (no-op without rules)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    axes = []
+    for a in logical_axes:
+        m = rules.logical.get(a) if a else None
+        if isinstance(m, tuple) and len(m) == 1:
+            m = m[0]
+        axes.append(m)
+    spec = safe_spec(x.shape, P(*axes), rules.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_sharding_mesh(rules.mesh), spec))

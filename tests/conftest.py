@@ -1,0 +1,18 @@
+"""Test session setup.
+
+Locks the jax backend to the single real CPU device BEFORE any test module
+can import something that fiddles with XLA_FLAGS (the dry-run launcher sets
+--xla_force_host_platform_device_count=512 for itself; tests must never see
+that).
+"""
+import jax
+
+jax.devices()                                            # lock backend now
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

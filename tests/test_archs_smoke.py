@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch,
+REDUCED variant (2 layers, d_model ≤ 512, ≤ 4 experts), one forward/train
+step on CPU — output shapes + no NaNs — plus prefill→decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as tf
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng, with_labels=True):
+    if cfg.arch_type == "audio":
+        K = cfg.frontend.n_codebooks
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, K, S)),
+                           jnp.int32)
+        d = {"tokens": toks}
+        if with_labels:
+            d["labels"] = toks
+        return d
+    if cfg.arch_type == "vlm":
+        nm = cfg.frontend.n_media_tokens
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S - nm)),
+                           jnp.int32)
+        d = {"tokens": toks,
+             "media": jnp.asarray(rng.normal(size=(B, nm,
+                                                   cfg.frontend.embed_dim)),
+                                  jnp.float32)}
+        if with_labels:
+            d["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                      jnp.int32)
+        return d
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    d = {"tokens": toks}
+    if with_labels:
+        d["labels"] = toks
+    return d
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_invariants(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+    full = get_config(arch)
+    assert full.arch_type == cfg.arch_type
+    assert full.num_params() > cfg.num_params()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(0)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    opt = optim.adam()
+    step = tf.make_train_step(cfg, opt, dtype=jnp.float32)
+    p2, st2, m = jax.jit(step)(params, opt.init(params), _batch(cfg, rng),
+                               1e-3)
+    assert np.isfinite(float(m["loss"]))
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), params, p2))
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(1)
+    params = tf.init_model(jax.random.PRNGKey(1), cfg)
+    logits, aux, _ = tf.forward(params, _batch(cfg, rng, with_labels=False),
+                                cfg, dtype=jnp.float32, remat=False)
+    if cfg.arch_type == "audio":
+        assert logits.shape == (B, cfg.frontend.n_codebooks, S,
+                                cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode_step against a prefilled cache == full forward's last logits."""
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:   # capacity drops make bit-exactness impossible
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    rng = np.random.default_rng(2)
+    params = tf.init_model(jax.random.PRNGKey(2), cfg)
+    batch = _batch(cfg, rng, with_labels=False)
+    logits_full, _, _ = tf.forward(params, batch, cfg, dtype=jnp.float32,
+                                   remat=False)
+    nm = cfg.frontend.n_media_tokens if cfg.arch_type == "vlm" else 0
+    toks = batch["tokens"]
+    if cfg.arch_type == "audio":
+        pre = {"tokens": toks[:, :, :S - 1]}
+        dec = {"tokens": toks[:, :, S - 1:]}
+    elif cfg.arch_type == "vlm":
+        pre = {"tokens": toks[:, :S - 1 - nm], "media": batch["media"]}
+        dec = {"tokens": toks[:, S - 1 - nm:S - nm]}
+    else:
+        pre = {"tokens": toks[:, :S - 1]}
+        dec = {"tokens": toks[:, S - 1:]}
+    caches = tf.init_cache(cfg, B, S, dtype=jnp.float32)
+    _, _, (caches2, _, _) = tf.forward(params, pre, cfg, dtype=jnp.float32,
+                                       caches=caches, remat=False)
+    logits_dec, _ = tf.decode_step(params, caches2, dec, jnp.int32(S - 1),
+                                   cfg, dtype=jnp.float32)
+    a = logits_full[:, :, -1] if cfg.arch_type == "audio" \
+        else logits_full[:, -1]
+    b = logits_dec[:, :, 0] if cfg.arch_type == "audio" else logits_dec[:, 0]
+    scale = float(jnp.max(jnp.abs(a))) + 1e-6
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-2 * max(scale, 1.0)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "zamba2-7b", "xlstm-1.3b"])
+def test_multi_step_decode(arch):
+    """Three consecutive decode steps track the full forward."""
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(3)
+    params = tf.init_model(jax.random.PRNGKey(3), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    logits_full, _, _ = tf.forward(params, {"tokens": toks}, cfg,
+                                   dtype=jnp.float32, remat=False)
+    caches = tf.init_cache(cfg, B, S, dtype=jnp.float32)
+    k = 3
+    _, _, (caches, _, _) = tf.forward(params, {"tokens": toks[:, :S - k]},
+                                      cfg, dtype=jnp.float32, caches=caches,
+                                      remat=False)
+    for t in range(S - k, S):
+        logits_dec, caches = tf.decode_step(
+            params, caches, {"tokens": toks[:, t:t + 1]}, jnp.int32(t), cfg,
+            dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(logits_full[:, t] - logits_dec[:, 0])))
+        assert err < 5e-2, (t, err)
+
+
+def test_sliding_window_decode_matches_windowed_forward():
+    """Ring-buffer sliding-window decode == full forward with same window."""
+    cfg = get_config("qwen3-14b").reduced()
+    win = 16
+    rng = np.random.default_rng(4)
+    params = tf.init_model(jax.random.PRNGKey(4), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    logits_full, _, _ = tf.forward(params, {"tokens": toks}, cfg,
+                                   dtype=jnp.float32, remat=False, window=win)
+    caches = tf.init_cache(cfg, B, win, dtype=jnp.float32)   # ring buffer
+    _, _, (caches, _, _) = tf.forward(params, {"tokens": toks[:, :win]}, cfg,
+                                      dtype=jnp.float32, caches=caches,
+                                      remat=False, window=win)
+    for t in range(win, S):
+        logits_dec, caches = tf.decode_step(
+            params, caches, {"tokens": toks[:, t:t + 1]}, jnp.int32(t), cfg,
+            dtype=jnp.float32, window=win)
+    err = float(jnp.max(jnp.abs(logits_full[:, -1] - logits_dec[:, 0])))
+    assert err < 5e-2, err

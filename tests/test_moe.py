@@ -1,0 +1,106 @@
+"""MoE dispatch/combine invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe as moe_mod
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("dbrx-132b").reduced()
+
+
+def test_capacity_formula(cfg):
+    e = cfg.moe
+    c = moe_mod.capacity(e, 64)
+    assert c >= e.top_k
+    assert c >= e.capacity_factor * 64 * e.top_k / e.n_experts - 1
+
+
+def test_choose_group_divides():
+    assert moe_mod._choose_group(126, 64) == 63
+    assert moe_mod._choose_group(128, 64) == 64
+    assert moe_mod._choose_group(7, 64) == 7
+
+
+def test_moe_output_finite_and_shaped(cfg):
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, cfg.d_model)),
+                    jnp.float32)
+    out, aux = moe_mod.moe_ffn(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 0
+
+
+def test_aux_loss_balanced_router_is_one():
+    """Uniform routing ⇒ GShard aux loss → E·Σ (1/E)(1/E)·E = 1·weight."""
+    cfg = get_config("dbrx-132b").reduced()
+    p = moe_mod.init_moe(jax.random.PRNGKey(1), cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))      # uniform probs
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 64, cfg.d_model)),
+                    jnp.float32)
+    _, aux = moe_mod.moe_ffn(p, x, cfg)
+    # ties in top_k make the top-1 frac degenerate but bounded
+    assert 0.0 <= float(aux) <= 2.0 * cfg.moe.router_aux_weight * 4
+
+
+def test_high_capacity_equals_dense_expert_mixture(cfg):
+    """With capacity high enough to never drop, output = Σ_k gate_k·FFN_k(x)."""
+    big = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    p = moe_mod.init_moe(jax.random.PRNGKey(2), big)
+    r = np.random.default_rng(2)
+    x = jnp.asarray(r.normal(size=(1, 16, big.d_model)), jnp.float32)
+    out, _ = moe_mod.moe_ffn(p, x, big)
+
+    # reference: route per token without capacity
+    e = big.moe
+    xg = x.reshape(-1, big.d_model)
+    logits = xg @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, experts = jax.lax.top_k(probs, e.top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    want = np.zeros_like(xg)
+    for t in range(xg.shape[0]):
+        for kk in range(e.top_k):
+            ei = int(experts[t, kk])
+            h = xg[t] @ p["moe_w_in"][ei]
+            g = xg[t] @ p["moe_w_gate"][ei]
+            y = (h * jax.nn.silu(g)) @ p["moe_w_out"][ei]
+            want[t] += float(gates[t, kk]) * np.asarray(y)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, big.d_model),
+                               want, rtol=2e-3, atol=2e-3)
+
+
+def test_capacity_drop_degrades_gracefully(cfg):
+    tiny = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    p = moe_mod.init_moe(jax.random.PRNGKey(3), tiny)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(2, 64, tiny.d_model)),
+                    jnp.float32)
+    out, _ = moe_mod.moe_ffn(p, x, tiny)
+    assert np.isfinite(np.asarray(out)).all()
+    # dropped tokens produce zero routed output; norm is below no-drop norm
+    big = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    out_big, _ = moe_mod.moe_ffn(p, x, big)
+    assert float(jnp.abs(out).sum()) <= float(jnp.abs(out_big).sum()) + 1e-3
+
+
+def test_shared_experts_added():
+    ds = get_config("deepseek-v3-671b").reduced()
+    p = moe_mod.init_moe(jax.random.PRNGKey(4), ds)
+    assert "shared_w_in" in p
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(1, 16, ds.d_model)),
+                    jnp.float32)
+    out, _ = moe_mod.moe_ffn(p, x, ds)
+    # zeroing the shared expert changes the output
+    p0 = dict(p, shared_w_out=jnp.zeros_like(p["shared_w_out"]))
+    out0, _ = moe_mod.moe_ffn(p0, x, ds)
+    assert float(jnp.abs(out - out0).max()) > 1e-6

@@ -1,0 +1,101 @@
+"""SSD (Mamba2) and xLSTM block invariants: chunked-parallel == recurrent,
+chunk-size invariance, state handoff."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ssm as ssm_mod, xlstm as xm
+
+
+@pytest.fixture(scope="module")
+def zcfg():
+    return get_config("zamba2-7b").reduced()
+
+
+@pytest.fixture(scope="module")
+def xcfg():
+    return get_config("xlstm-1.3b").reduced()
+
+
+def test_ssd_chunk_size_invariance(zcfg):
+    """The chunked scan must be algebraically independent of chunk size."""
+    p = ssm_mod.init_ssm(jax.random.PRNGKey(0), zcfg)
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(2, 64, zcfg.d_model)), jnp.float32)
+    outs = []
+    for q in (8, 16, 64):
+        cfg = dataclasses.replace(
+            zcfg, ssm=dataclasses.replace(zcfg.ssm, chunk_size=q))
+        o, st = ssm_mod.ssm_forward(p, x, cfg)
+        outs.append((o, st["ssm"]))
+    for o, s in outs[1:]:
+        np.testing.assert_allclose(o, outs[0][0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s, outs[0][1], rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_forward_matches_stepwise_decode(zcfg):
+    p = ssm_mod.init_ssm(jax.random.PRNGKey(1), zcfg)
+    r = np.random.default_rng(1)
+    S = 40                                               # non-multiple of chunk
+    x = jnp.asarray(r.normal(size=(1, S, zcfg.d_model)), jnp.float32)
+    out_f, st_f = ssm_mod.ssm_forward(p, x, zcfg)
+    st = ssm_mod.init_ssm_state(zcfg, 1, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, st = ssm_mod.ssm_decode(p, x[:, t:t + 1], st, zcfg)
+        outs.append(o)
+    out_r = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(out_f, out_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_f["ssm"], st["ssm"], rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_forward_matches_recurrent(xcfg):
+    p = xm.init_mlstm(jax.random.PRNGKey(2), xcfg)
+    r = np.random.default_rng(2)
+    S = 70
+    x = jnp.asarray(r.normal(size=(1, S, xcfg.d_model)), jnp.float32)
+    out_f, st_f = xm.mlstm_forward(p, x, xcfg)
+    st = xm.init_mlstm_state(xcfg, 1)
+    outs = []
+    for t in range(S):
+        o, st = xm.mlstm_decode(p, x[:, t:t + 1], st, xcfg)
+        outs.append(o)
+    np.testing.assert_allclose(out_f, jnp.concatenate(outs, 1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_f["C"], st["C"], rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_forward_matches_recurrent(xcfg):
+    p = xm.init_slstm(jax.random.PRNGKey(3), xcfg)
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.normal(size=(2, 12, xcfg.d_model)), jnp.float32)
+    out_f, st_f = xm.slstm_forward(p, x, xcfg)
+    st = xm.init_slstm_state(xcfg, 2)
+    outs = []
+    for t in range(12):
+        o, st = xm.slstm_decode(p, x[:, t:t + 1], st, xcfg)
+        outs.append(o)
+    np.testing.assert_allclose(out_f, jnp.concatenate(outs, 1),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_stabilizer_extreme_gates(xcfg):
+    """The max-stabilizer must keep sLSTM finite under large inputs."""
+    p = xm.init_slstm(jax.random.PRNGKey(4), xcfg)
+    x = jnp.full((1, 20, xcfg.d_model), 30.0, jnp.float32)
+    out, st = xm.slstm_forward(p, x, xcfg)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(np.asarray(st["c"])).all()
+
+
+def test_ssm_state_no_nan_long_seq(zcfg):
+    p = ssm_mod.init_ssm(jax.random.PRNGKey(5), zcfg)
+    x = jnp.asarray(np.random.default_rng(5).normal(
+        size=(1, 512, zcfg.d_model)), jnp.float32)
+    o, st = ssm_mod.ssm_forward(p, x, zcfg)
+    assert np.isfinite(np.asarray(o)).all()
+    assert np.isfinite(np.asarray(st["ssm"])).all()

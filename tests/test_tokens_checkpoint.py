@@ -1,0 +1,78 @@
+"""Token pipeline + checkpoint round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs import get_config
+from repro.configs.base import ForecasterConfig
+from repro.data import tokens
+from repro.models import forecaster
+
+
+def test_delay_pattern_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(1, 100, (2, 4, 16)).astype(np.int32)
+    d = tokens.apply_delay_pattern(codes)
+    u = tokens.undelay_pattern(d)
+    # positions that survive the shift round-trip exactly
+    for k in range(4):
+        np.testing.assert_array_equal(u[:, k, :16 - k], codes[:, k, :16 - k])
+    # codebook k is delayed by k steps
+    np.testing.assert_array_equal(d[:, 2, 2:], codes[:, 2, :-2])
+
+
+def test_zipf_tokens_in_vocab():
+    rng = np.random.default_rng(0)
+    t = tokens.zipf_tokens(rng, (4, 128), vocab=50)
+    assert t.min() >= 0 and t.max() < 50
+    # low ids should dominate (Zipf)
+    assert (t < 10).mean() > 0.35
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "musicgen-medium",
+                                  "llava-next-34b"])
+def test_make_lm_batch_layouts(arch):
+    cfg = get_config(arch).reduced()
+    b = tokens.make_lm_batch(cfg, 2, 64)
+    if cfg.arch_type == "audio":
+        assert b["tokens"].shape == (2, cfg.frontend.n_codebooks, 64)
+    elif cfg.arch_type == "vlm":
+        nm = cfg.frontend.n_media_tokens
+        assert b["tokens"].shape == (2, 64 - nm)
+        assert b["media"].shape == (2, nm, cfg.frontend.embed_dim)
+        assert b["labels"].shape == (2, 64)
+    else:
+        assert b["tokens"].shape == (2, 64)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = ForecasterConfig(hidden_dim=16)
+    params = forecaster.init_forecaster(jax.random.PRNGKey(0), cfg)
+    p = tmp_path / "ckpt.npz"
+    checkpoint.save(p, params, metadata={"round": 7})
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored = checkpoint.restore(p, like)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 params, restored)
+    assert checkpoint.metadata(p) == {"round": 7}
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    tree = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                             jnp.bfloat16)}
+    p = tmp_path / "b.npz"
+    checkpoint.save(p, tree)
+    out = checkpoint.restore(p, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.zeros((4,))}
+    p = tmp_path / "c.npz"
+    checkpoint.save(p, tree)
+    with pytest.raises(ValueError):
+        checkpoint.restore(p, {"w": jnp.zeros((5,))})
