@@ -41,8 +41,15 @@ def _key(**kw):
 
 def run_fl(state="CA", cell="lstm", loss="ew_mse", beta=2.0, clusters=0,
            clients=None, rounds=None, days=None, heldout=None, seed=0,
-           lr=0.05, hidden=64, use_cache=True):
-    """Train (or fetch cached) + evaluate. Returns a metrics dict."""
+           lr=0.05, hidden=64, server_opt="fedavg", server_lr=1.0,
+           prox_mu=0.0, sampling="uniform", use_cache=True):
+    """Train (or fetch cached) + evaluate. Returns a metrics dict.
+
+    ``server_opt`` / ``server_lr`` / ``prox_mu`` / ``sampling`` select the
+    round engine's server optimizer and client-selection scheme (see
+    ``repro.core.server_opt`` / ``repro.core.sampling``); they are part of
+    the cache key, so each engine configuration trains once.
+    """
     sc = scale()
     clients = clients or sc["clients"]
     rounds = rounds or sc["rounds"]
@@ -50,7 +57,8 @@ def run_fl(state="CA", cell="lstm", loss="ew_mse", beta=2.0, clusters=0,
     heldout = heldout or sc["heldout"]
     kw = dict(state=state, cell=cell, loss=loss, beta=beta, clusters=clusters,
               clients=clients, rounds=rounds, days=days, heldout=heldout,
-              seed=seed, lr=lr, hidden=hidden)
+              seed=seed, lr=lr, hidden=hidden, server_opt=server_opt,
+              server_lr=server_lr, prox_mu=prox_mu, sampling=sampling)
     CACHE_DIR.mkdir(parents=True, exist_ok=True)
     cpath = CACHE_DIR / f"{_key(**kw)}.json"
     if use_cache and cpath.exists():
@@ -61,7 +69,9 @@ def run_fl(state="CA", cell="lstm", loss="ew_mse", beta=2.0, clusters=0,
     flcfg = FLConfig(n_clients=clients, clients_per_round=clients,
                      rounds=rounds, lr=lr, loss=loss, beta=beta,
                      n_clusters=clusters, seed=seed,
-                     cluster_days=min(273, int(days * 0.75)))
+                     cluster_days=min(273, int(days * 0.75)),
+                     server_opt=server_opt, server_lr=server_lr,
+                     prox_mu=prox_mu, sampling=sampling)
     train_series = synthetic.generate_buildings(state, list(range(clients)),
                                                 days=days)
     results = fedavg.run_federated_training(train_series, fcfg, flcfg)

@@ -1,10 +1,17 @@
 """End-to-end driver (deliverable b): the paper's full pipeline.
 
-K-means clustering on privacy-coarsened summaries → per-cluster FedAvg LSTM
-training with EW-MSE → held-out evaluation vs the single global model —
-i.e. Tables 2/3 + the EW-MSE ablation at example scale.
+K-means clustering on privacy-coarsened summaries → per-cluster federated
+LSTM training with EW-MSE → held-out evaluation vs the single global model —
+i.e. Tables 2/3 + the EW-MSE ablation at example scale — plus the round
+engine's server-optimizer axis and an unseen-CLIENT generalization report:
+buildings held out of training entirely (``--holdout-frac``) and fresh
+buildings from every state, scored with no client-side retraining (§5.4).
 
   PYTHONPATH=src python examples/fl_forecasting_e2e.py [--rounds 60]
+  PYTHONPATH=src python examples/fl_forecasting_e2e.py \
+      --server-opt fedadam --server-lr 0.05
+  PYTHONPATH=src python examples/fl_forecasting_e2e.py \
+      --server-opt fedprox --prox-mu 0.01 --sampling weighted
 """
 import argparse
 
@@ -12,6 +19,8 @@ import numpy as np
 
 from repro.configs.base import FLConfig, ForecasterConfig
 from repro.core import clustering, fedavg
+from repro.core.sampling import SAMPLING_STRATEGIES
+from repro.core.server_opt import SERVER_OPTS
 from repro.data import synthetic, windows
 
 
@@ -22,6 +31,20 @@ def main():
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--heldout", type=int, default=40)
     ap.add_argument("--days", type=int, default=120)
+    ap.add_argument("--server-opt", default="fedavg", choices=SERVER_OPTS,
+                    help="server aggregation/optimizer rule")
+    ap.add_argument("--server-lr", type=float, default=1.0,
+                    help="server step on the pseudo-gradient "
+                         "(fedadam/fedyogi want ~0.03-0.1)")
+    ap.add_argument("--prox-mu", type=float, default=0.0,
+                    help="FedProx proximal strength (with --server-opt fedprox)")
+    ap.add_argument("--sampling", default="uniform",
+                    choices=SAMPLING_STRATEGIES)
+    ap.add_argument("--holdout-frac", type=float, default=0.0,
+                    help="fraction of clients excluded from training for the "
+                         "unseen-client eval (0 keeps the paper's exact "
+                         "training population; fresh-building transfer is "
+                         "reported either way)")
     args = ap.parse_args()
 
     series = synthetic.generate_buildings(args.state,
@@ -30,9 +53,13 @@ def main():
     fcfg = ForecasterConfig(cell="lstm", hidden_dim=64)
     base = dict(n_clients=args.clients, clients_per_round=args.clients,
                 rounds=args.rounds, lr=0.05, loss="ew_mse", beta=2.0,
-                cluster_days=min(273, int(args.days * 0.75)))
+                cluster_days=min(273, int(args.days * 0.75)),
+                server_opt=args.server_opt, server_lr=args.server_lr,
+                prox_mu=args.prox_mu, sampling=args.sampling,
+                holdout_frac=args.holdout_frac)
 
-    print(f"== clustered FL ({args.clients} clients → 4 clusters)")
+    print(f"== clustered FL ({args.clients} clients → 4 clusters, "
+          f"server_opt={args.server_opt}, sampling={args.sampling})")
     res_c = fedavg.run_federated_training(
         series, fcfg, FLConfig(**base, n_clusters=4),
         log_every=args.rounds // 2)
@@ -67,6 +94,23 @@ def main():
               f"({int(m.sum() / n_win)} held-out buildings)")
     print(f"\navg of cluster models: {np.mean(accs):.2f}% vs global "
           f"{g['accuracy']:.2f}%  (paper: clustering ≥ global)")
+
+    # ---- unseen-CLIENT generalization (§5.4): clients held out of training
+    # entirely, plus fresh buildings from every state — no retraining.
+    print("\n== unseen-client generalization (global model, no retraining)")
+    held_ids = res_g[-1].heldout_clients
+    if held_ids is not None:
+        m = fedavg.evaluate_unseen_clients(res_g[-1].params, series[held_ids],
+                                           fcfg)
+        print(f"{args.state} held-out clients ({len(held_ids)} never "
+              f"trained): accuracy {m['accuracy']:.2f}%  rmse {m['rmse']:.3f}")
+    for state in sorted(synthetic.STATES):
+        fresh = synthetic.generate_buildings(
+            state, list(range(20_000, 20_000 + args.heldout)), days=args.days)
+        m = fedavg.evaluate_unseen_clients(res_g[-1].params, fresh, fcfg)
+        tag = "in-dist" if state == args.state else "transfer"
+        print(f"{state:>4} fresh buildings ({tag}): "
+              f"accuracy {m['accuracy']:.2f}%  rmse {m['rmse']:.3f}")
 
 
 if __name__ == "__main__":

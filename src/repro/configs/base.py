@@ -234,7 +234,15 @@ class ForecasterConfig:
 
 @dataclass(frozen=True)
 class FLConfig:
-    """Federated-learning schedule (paper Alg. 1 + §4)."""
+    """Federated-learning schedule (paper Alg. 1 + §4) + round-engine knobs.
+
+    The engine knobs select the pluggable pieces of the federated round
+    (``core/server_opt.py`` / ``core/sampling.py``): ``server_opt`` picks the
+    aggregation weighting + server-side optimizer applied to the
+    pseudo-gradient ``w_global - w_agg``; ``sampling`` picks the per-round
+    client-selection scheme.  Defaults reproduce the paper exactly (uniform
+    FedAvg, uniform sampling).
+    """
     n_clients: int = 100               # N
     clients_per_round: int = 100       # M
     local_epochs: int = 1              # E
@@ -246,6 +254,18 @@ class FLConfig:
     n_clusters: int = 4                # K-means k (0 = no clustering)
     cluster_days: int = 273            # t_p: daily-average summary length
     seed: int = 0
+    # ------------------------------------------------- round-engine knobs
+    server_opt: str = "fedavg"         # fedavg | fedavg_weighted | fedprox
+    #                                  # | fedadam | fedyogi
+    server_lr: float = 1.0             # server step on the pseudo-gradient
+    server_momentum: float = 0.0       # >0 turns fedavg* into FedAvgM
+    server_beta1: float = 0.9          # fedadam / fedyogi first moment
+    server_beta2: float = 0.99         # fedadam / fedyogi second moment
+    server_eps: float = 1e-3           # fedadam / fedyogi adaptivity floor
+    prox_mu: float = 0.0               # FedProx proximal strength (client side)
+    sampling: str = "uniform"          # uniform | weighted | round_robin
+    holdout_frac: float = 0.0          # fraction of clients held out of
+    #                                  # training for unseen-client eval
 
 
 @dataclass(frozen=True)

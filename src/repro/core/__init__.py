@@ -1,17 +1,29 @@
-"""The paper's contribution: FedAvg with clustering + EW-MSE, and its
-generalization to cross-pod local-SGD training."""
-from repro.core import clustering, fedavg, local_sgd, losses, sarima
-from repro.core.fedavg import (FLResult, evaluate_global, fedavg_aggregate,
-                               fedavg_round, make_sharded_round,
-                               run_federated_training)
+"""The paper's contribution: FedAvg with clustering + EW-MSE, generalized
+into a pluggable federated round engine (sampling × aggregation weighting ×
+server optimizer) and its extension to cross-pod local-SGD training."""
+from repro.core import (clustering, fedavg, local_sgd, losses, sampling,
+                        sarima, server_opt)
+from repro.core.fedavg import (FLResult, RoundEngine, engine_round,
+                               evaluate_global, evaluate_unseen_clients,
+                               fedavg_aggregate, fedavg_round,
+                               make_sharded_engine_round, make_sharded_round,
+                               run_federated_training, weighted_aggregate)
 from repro.core.local_sgd import (LocalSGDConfig, OuterState, fedavg_outer,
                                   init_outer_state, outer_step)
 from repro.core.losses import (accuracy, ew_mse, make_loss, mape, mse,
                                per_horizon_accuracy, rmse, weighted_ce)
+from repro.core.sampling import SAMPLING_STRATEGIES, make_sampler
+from repro.core.server_opt import (SERVER_OPTS, ServerState,
+                                   init_server_state, server_update)
 
-__all__ = ["clustering", "fedavg", "local_sgd", "losses", "sarima",
-           "FLResult", "evaluate_global", "fedavg_aggregate", "fedavg_round",
-           "make_sharded_round", "run_federated_training", "LocalSGDConfig",
+__all__ = ["clustering", "fedavg", "local_sgd", "losses", "sampling",
+           "sarima", "server_opt",
+           "FLResult", "RoundEngine", "engine_round", "evaluate_global",
+           "evaluate_unseen_clients", "fedavg_aggregate", "fedavg_round",
+           "make_sharded_engine_round", "make_sharded_round",
+           "run_federated_training", "weighted_aggregate", "LocalSGDConfig",
            "OuterState", "fedavg_outer", "init_outer_state", "outer_step",
            "accuracy", "ew_mse", "make_loss", "mape", "mse",
-           "per_horizon_accuracy", "rmse", "weighted_ce"]
+           "per_horizon_accuracy", "rmse", "weighted_ce",
+           "SAMPLING_STRATEGIES", "make_sampler", "SERVER_OPTS",
+           "ServerState", "init_server_state", "server_update"]

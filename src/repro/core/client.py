@@ -4,6 +4,12 @@ E epochs of minibatch SGD on the client's private windows, expressed as a
 fixed-shape ``lax.scan`` over precomputed minibatch indices so that the whole
 client population can be vmapped / shard_mapped over the ``clients`` axis —
 the TPU-native realization of "clients train in parallel".
+
+FedProx (Li et al. 2020) is supported via ``prox_mu``: the local objective
+gains ``mu/2 ||w - w_global||^2`` anchored at the round's incoming global
+params, realized as an extra ``mu * (w - w_global)`` gradient term.  With
+``mu = 0`` the added term is exactly zero, so FedAvg semantics (and numerics)
+are unchanged.
 """
 from __future__ import annotations
 
@@ -18,23 +24,31 @@ from repro.models import forecaster
 
 
 def sgd_step(params, batch, lr, cfg: ForecasterConfig, loss: Callable,
-             cell_impl: str = "jnp"):
+             cell_impl: str = "jnp", anchor=None, prox_mu=0.0):
+    """One SGD step; ``anchor``/``prox_mu`` add the FedProx proximal gradient."""
     l, g = jax.value_and_grad(forecaster.loss_fn)(params, batch, cfg, loss,
                                                   cell_impl)
+    if anchor is not None:
+        g = jax.tree.map(lambda gw, w, a: gw + prox_mu * (w - a),
+                         g, params, anchor)
     params = jax.tree.map(lambda w, gw: w - lr * gw, params, g)
     return params, l
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "loss", "cell_impl"))
 def local_update(params, x, y, batch_idx, lr, cfg: ForecasterConfig,
-                 loss: Callable, cell_impl: str = "jnp"):
+                 loss: Callable, cell_impl: str = "jnp", prox_mu=0.0):
     """Run the client's local schedule.
 
     params: global model (pytree); x: (n_win, L, 1); y: (n_win, H);
-    batch_idx: (steps, B) int32. Returns (local params, mean local loss).
+    batch_idx: (steps, B) int32; prox_mu: FedProx strength (0 = plain FedAvg).
+    Returns (local params, mean local loss).
     """
+    anchor = params                      # round-start global model (FedProx)
+
     def step(p, idx):
-        return sgd_step(p, {"x": x[idx], "y": y[idx]}, lr, cfg, loss, cell_impl)
+        return sgd_step(p, {"x": x[idx], "y": y[idx]}, lr, cfg, loss,
+                        cell_impl, anchor=anchor, prox_mu=prox_mu)
 
     params, losses = jax.lax.scan(step, params, batch_idx)
     return params, jnp.mean(losses)

@@ -1,15 +1,28 @@
-"""FedAvg engine (paper Alg. 1) — pseudo-distributed (vmap) and mesh-sharded
-(shard_map) execution of the same round schedule.
+"""Federated round engine (paper Alg. 1, generalized) — pseudo-distributed
+(vmap) and mesh-sharded (shard_map) execution of the same round schedule.
 
-One round: the server broadcasts global params; each of the M selected clients
-runs ``ClientUpdate`` (E local epochs of minibatch SGD); the server averages
-the returned models: ``w ← (1/|s|) Σ w_i``.
+One round: the server *selects* clients (``core/sampling.py``), broadcasts
+global params; each selected client runs ``ClientUpdate`` (E local epochs of
+minibatch SGD, optionally FedProx-regularized — ``core/client.py``); the
+server *aggregates* the returned models with per-client sample-count weights
+and applies a *server optimizer* to the pseudo-gradient ``w_global - w_agg``
+(``core/server_opt.py``).  Uniform FedAvg (``w <- (1/|s|) Σ w_i``) is the
+default configuration of that pipeline, not a special code path.
 
 The mesh-sharded path places clients on the ``clients`` (= data) mesh axis via
-``shard_map``; FedAvg aggregation is then a single ``psum`` — the paper's
-edge→cloud upload + cloud aggregation collapsed into one collective.  Local
-epochs run with NO cross-client communication, which is precisely what makes
-FedAvg cheaper on the wire than synchronous data-parallel SGD.
+``shard_map``; aggregation is then a single ``psum`` of the (tiny) parameter
+tree — the paper's edge→cloud upload + cloud aggregation collapsed into one
+collective.  Local epochs run with NO cross-client communication, which is
+precisely what makes FedAvg cheaper on the wire than synchronous
+data-parallel SGD.  The server step runs *outside* the round body, so the
+vmap and shard_map paths share it bit-for-bit.
+
+Engine selection is driven entirely by ``FLConfig``::
+
+    FLConfig(server_opt="fedadam", server_lr=0.05, sampling="weighted", ...)
+
+with ``server_opt ∈ {fedavg, fedavg_weighted, fedprox, fedadam, fedyogi}``
+and ``sampling ∈ {uniform, weighted, round_robin}``.
 """
 from __future__ import annotations
 
@@ -24,21 +37,47 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FLConfig, ForecasterConfig
 from repro.core import clustering, losses as losses_mod
+from repro.core import sampling as sampling_mod
+from repro.core import server_opt as server_opt_mod
 from repro.core.client import local_update
 from repro.data import partition, windows
 from repro.models import forecaster
+from repro.sharding import shard_map
 
 
+# ------------------------------------------------------------- aggregation
 def fedavg_aggregate(stacked_params):
-    """Average a client-stacked param tree (leading axis = clients)."""
+    """Uniformly average a client-stacked param tree (leading axis = clients)."""
     return jax.tree.map(lambda w: jnp.mean(w, axis=0), stacked_params)
+
+
+def _weighted_sums(stacked_params, weights):
+    """Per-shard weighted sums: the ONE place the weighting math lives.
+
+    Returns (tree of Σ_i weight_i * w_i, Σ_i weight_i).  Both execution
+    paths build their average from this — the vmap path divides directly,
+    the shard_map path psums numerator and denominator first — so any
+    future change to the weighting (clipping, DP noise, ...) applies to
+    both automatically.
+    """
+    def ws(w):
+        wt = weights.reshape((-1,) + (1,) * (w.ndim - 1))
+        return jnp.sum(w * wt, axis=0)
+
+    return jax.tree.map(ws, stacked_params), jnp.sum(weights)
+
+
+def weighted_aggregate(stacked_params, weights):
+    """Weighted average of a client-stacked tree; weights: (M,) float."""
+    sums, wsum = _weighted_sums(stacked_params, weights)
+    return jax.tree.map(lambda s: s / wsum, sums)
 
 
 # ------------------------------------------------------------ vmap execution
 @functools.partial(jax.jit, static_argnames=("cfg", "loss", "cell_impl"))
 def fedavg_round(params, x, y, batch_idx, lr, cfg: ForecasterConfig,
                  loss: Callable, cell_impl: str = "jnp"):
-    """One synchronous round over M clients (pseudo-distributed).
+    """One uniform-FedAvg round over M clients (pseudo-distributed, back-compat).
 
     x: (M, n_win, L, 1); y: (M, n_win, H); batch_idx: (M, steps, B).
     """
@@ -48,14 +87,32 @@ def fedavg_round(params, x, y, batch_idx, lr, cfg: ForecasterConfig,
     return fedavg_aggregate(locals_), jnp.mean(client_loss)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "loss", "cell_impl"))
+def engine_round(params, x, y, batch_idx, weights, lr, prox_mu,
+                 cfg: ForecasterConfig, loss: Callable,
+                 cell_impl: str = "jnp"):
+    """Generalized round: weighted aggregation + optional FedProx clients.
+
+    weights: (M,) aggregation weights (sample counts; pass ones for uniform);
+    prox_mu: FedProx proximal strength (0 = plain local SGD).  Returns
+    ``(w_agg, weighted mean client loss)`` — the server step is applied by
+    the caller (``RoundEngine.step``).
+    """
+    locals_, client_loss = jax.vmap(
+        local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
+        params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
+    w_agg = weighted_aggregate(locals_, weights)
+    loss_mean = jnp.sum(weights * client_loss) / jnp.sum(weights)
+    return w_agg, loss_mean
+
+
 # ------------------------------------------------------- shard_map execution
 def make_sharded_round(mesh, cfg: ForecasterConfig, loss: Callable,
                        client_axis: str = "clients", cell_impl: str = "jnp"):
-    """FedAvg round with clients sharded over a mesh axis.
+    """Uniform-FedAvg round with clients sharded over a mesh axis (back-compat).
 
-    Each mesh slot holds a contiguous shard of the selected clients; local
-    training is collective-free; the FedAvg average is ONE psum of the
-    (tiny) parameter tree per round.
+    ``round_fn(params, x, y, batch_idx, lr)`` — see
+    :func:`make_sharded_engine_round` for the weighted / FedProx variant.
     """
     def round_body(params, x, y, batch_idx, lr):
         locals_, client_loss = jax.vmap(
@@ -69,11 +126,111 @@ def make_sharded_round(mesh, cfg: ForecasterConfig, loss: Callable,
         return new_params, loss_mean
 
     pspec = P(client_axis)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         round_body, mesh=mesh,
         in_specs=(P(), pspec, pspec, pspec, P()),
         out_specs=(P(), P()),
         check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_engine_round(mesh, cfg: ForecasterConfig, loss: Callable,
+                              client_axis: str = "clients",
+                              cell_impl: str = "jnp"):
+    """Generalized sharded round; aggregation stays ONE psum of the param tree.
+
+    lru_cached on (mesh, cfg, loss, ...) so every engine configuration with
+    the same execution geometry shares one jitted round — the server
+    optimizer lives outside the round body and costs no recompile.
+
+    ``round_fn(params, x, y, batch_idx, weights, lr, prox_mu)`` with the
+    client-stacked args (x, y, batch_idx, weights) sharded over
+    ``client_axis``.  Each shard locally weight-sums its clients' params, the
+    cross-shard reduction is a single ``psum``, and the weight normalizer is
+    one scalar ``psum`` — identical math to :func:`engine_round`.
+    """
+    def round_body(params, x, y, batch_idx, weights, lr, prox_mu):
+        locals_, client_loss = jax.vmap(
+            local_update,
+            in_axes=(None, 0, 0, 0, None, None, None, None, None))(
+            params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
+        sums, wsum_local = _weighted_sums(locals_, weights)
+        wsum = jax.lax.psum(wsum_local, client_axis)
+        w_agg = jax.tree.map(
+            lambda s: jax.lax.psum(s, client_axis) / wsum, sums)
+        loss_mean = jax.lax.psum(jnp.sum(weights * client_loss),
+                                 client_axis) / wsum
+        return w_agg, loss_mean
+
+    pspec = P(client_axis)
+    return jax.jit(shard_map(
+        round_body, mesh=mesh,
+        in_specs=(P(), pspec, pspec, pspec, pspec, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False))
+
+
+# ------------------------------------------------------------- round engine
+class RoundEngine:
+    """Composable federated round: select → local update → aggregate → server.
+
+    Owns the jitted round function for ONE execution path (vmap when
+    ``mesh is None``, shard_map otherwise) plus the server-optimizer state,
+    so round logic is unit-testable without running full training::
+
+        engine = RoundEngine(fcfg, flcfg)          # or mesh=mesh
+        params, state = engine.init(jax.random.PRNGKey(0))
+        sel = engine.select(rng, members, m, round_idx, member_weights)
+        params, state, loss = engine.step(params, state, x[sel], y[sel],
+                                          bidx, counts[sel])
+    """
+
+    def __init__(self, fcfg: ForecasterConfig, flcfg: FLConfig, *,
+                 loss: Optional[Callable] = None, mesh=None,
+                 cell_impl: str = "jnp"):
+        if flcfg.server_opt not in server_opt_mod.SERVER_OPTS:
+            raise ValueError(f"unknown server_opt {flcfg.server_opt!r}")
+        self.fcfg, self.flcfg = fcfg, flcfg
+        self.loss = loss if loss is not None else losses_mod.make_loss(
+            flcfg.loss, flcfg.beta)
+        self.mesh, self.cell_impl = mesh, cell_impl
+        self.sampler = sampling_mod.make_sampler(flcfg.sampling)
+        # proximal term only under fedprox (prox_mu is ignored otherwise)
+        self.prox_mu = flcfg.prox_mu if flcfg.server_opt == "fedprox" else 0.0
+        self.weighted = server_opt_mod.uses_weighted_aggregation(flcfg)
+        self._sharded = None if mesh is None else make_sharded_engine_round(
+            mesh, fcfg, self.loss, cell_impl=cell_impl)
+
+    def init(self, key):
+        """Fresh global params + server-optimizer state."""
+        params = forecaster.init_forecaster(key, self.fcfg)
+        return params, server_opt_mod.init_server_state(params)
+
+    def select(self, rng, members: np.ndarray, m: int, round_idx: int,
+               weights: Optional[np.ndarray] = None) -> np.ndarray:
+        """Pick this round's m participants (``FLConfig.sampling``)."""
+        return self.sampler(rng, np.asarray(members), m, round_idx, weights)
+
+    def step(self, params, state, x, y, batch_idx, weights):
+        """One full round on already-selected client data.
+
+        x: (M, n_win, L, 1); y: (M, n_win, H); batch_idx: (M, steps, B);
+        weights: (M,) per-client sample counts.  Returns
+        ``(new params, new server state, round loss)``.
+        """
+        w = jnp.asarray(weights, jnp.float32)
+        if not self.weighted:             # uniform aggregation
+            w = jnp.ones_like(w)
+        lr = jnp.float32(self.flcfg.lr)
+        mu = jnp.float32(self.prox_mu)
+        if self._sharded is not None:
+            w_agg, loss = self._sharded(params, x, y, batch_idx, w, lr, mu)
+        else:
+            w_agg, loss = engine_round(params, x, y, batch_idx, w, lr, mu,
+                                       self.fcfg, self.loss, self.cell_impl)
+        params, state = server_opt_mod.server_update(params, w_agg, state,
+                                                     self.flcfg)
+        return params, state, loss
 
 
 # ------------------------------------------------------------------ driver
@@ -82,63 +239,82 @@ class FLResult:
     params: Dict
     loss_history: np.ndarray
     cluster_centroids: Optional[np.ndarray] = None
-    cluster_assignments: Optional[np.ndarray] = None
+    cluster_assignments: Optional[np.ndarray] = None  # (N,); -1 = held out
+    heldout_clients: Optional[np.ndarray] = None
 
 
 def run_federated_training(all_series: np.ndarray, fcfg: ForecasterConfig,
                            flcfg: FLConfig, *, mesh=None,
                            log_every: int = 0) -> Dict[int, FLResult]:
-    """Full Alg. 1: optional clustering, then per-cluster FedAvg training.
+    """Full Alg. 1 via the round engine: optional client holdout, optional
+    clustering, then per-cluster federated training.
 
-    all_series: (N, T) raw kWh, one row per client.  Returns
+    all_series: (N, T) raw kWh, one row per client.  When
+    ``flcfg.holdout_frac > 0`` that fraction of clients is excluded from
+    training entirely (unseen-client generalization split; their indices are
+    reported on every ``FLResult.heldout_clients``).  Returns
     {cluster_id: FLResult}; cluster_id = -1 when clustering is off.
     """
     rng = np.random.default_rng(flcfg.seed)
-    loss = losses_mod.make_loss(flcfg.loss, flcfg.beta)
-    data = windows.batched_client_windows(all_series, fcfg.lookback, fcfg.horizon)
-    x_tr, y_tr = data["x_train"], data["y_train"]       # (N, n_win, L, 1), (N, n_win, H)
+    engine = RoundEngine(fcfg, flcfg, mesh=mesh)
+    data = windows.batched_client_windows(all_series, fcfg.lookback,
+                                          fcfg.horizon)
+    x_tr, y_tr = data["x_train"], data["y_train"]   # (N, n_win, L, 1), (N, n_win, H)
     n_win = x_tr.shape[1]
     steps = partition.local_steps(n_win, flcfg.batch_size, flcfg.local_epochs)
 
+    n_total = all_series.shape[0]
+    train_ids, held_ids = partition.holdout_clients(
+        np.random.default_rng(flcfg.seed), n_total, flcfg.holdout_frac)
+    if len(train_ids) == 0:
+        raise ValueError(
+            f"holdout_frac={flcfg.holdout_frac} leaves no training clients "
+            f"(n_clients={n_total})")
+    # Per-client sample counts: aggregation + sampling weights.  NOTE: every
+    # synthetic client has a full year of history, so counts are equal and
+    # fedavg_weighted / weighted sampling coincide with uniform HERE — the
+    # weighting becomes material with variable-length client histories
+    # (real deployments, future ragged-window loaders).
+    counts = np.full(n_total, n_win, np.float32)
+
     # -------- optional privacy-preserving clustering (server side, Alg. 1)
     if flcfg.n_clusters > 1:
-        z = windows.daily_average_vector(all_series, flcfg.cluster_days)
-        cents, assigns, _ = clustering.kmeans(z, flcfg.n_clusters, seed=flcfg.seed)
-        groups = partition.cluster_partition(assigns)
+        z = windows.daily_average_vector(all_series[train_ids],
+                                         flcfg.cluster_days)
+        cents, train_assigns, _ = clustering.kmeans(z, flcfg.n_clusters,
+                                                    seed=flcfg.seed)
+        groups = {cid: train_ids[m] for cid, m in
+                  partition.cluster_partition(train_assigns).items()}
+        # report assignments in FULL client index space (-1 = held out)
+        assigns = np.full(n_total, -1, train_assigns.dtype)
+        assigns[train_ids] = train_assigns
     else:
         cents, assigns = None, None
-        groups = {-1: np.arange(all_series.shape[0])}
-
-    round_fn = None
-    if mesh is not None:
-        round_fn = make_sharded_round(mesh, fcfg, loss)
+        groups = {-1: train_ids}
 
     results: Dict[int, FLResult] = {}
     for cid, members in groups.items():
         key = jax.random.PRNGKey(flcfg.seed + (cid if cid >= 0 else 0))
-        params = forecaster.init_forecaster(key, fcfg)
+        params, sstate = engine.init(key)
         hist = []
         m = min(flcfg.clients_per_round, len(members))
-        if mesh is not None:                             # pad to mesh divisibility
+        if mesh is not None:                         # pad to mesh divisibility
             n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
             m = max(n_dev, (m // n_dev) * n_dev)
         for t in range(flcfg.rounds):
-            sel = members[partition.sample_clients(rng, len(members), m)]
-            if len(sel) < m:                             # sample w/ replacement pad
-                sel = np.concatenate([sel, rng.choice(members, m - len(sel))])
-            bidx = rng.integers(0, n_win, size=(len(sel), steps, flcfg.batch_size))
-            args = (params, jnp.asarray(x_tr[sel]), jnp.asarray(y_tr[sel]),
-                    jnp.asarray(bidx), jnp.float32(flcfg.lr))
-            if round_fn is not None:
-                params, l = round_fn(*args)
-            else:
-                params, l = fedavg_round(*args, fcfg, loss)
+            sel = engine.select(rng, members, m, t, counts[members])
+            bidx = rng.integers(0, n_win, size=(len(sel), steps,
+                                                flcfg.batch_size))
+            params, sstate, l = engine.step(
+                params, sstate, jnp.asarray(x_tr[sel]), jnp.asarray(y_tr[sel]),
+                jnp.asarray(bidx), counts[sel])
             hist.append(float(l))
             if log_every and (t + 1) % log_every == 0:
                 print(f"[cluster {cid}] round {t+1}/{flcfg.rounds} "
                       f"loss {hist[-1]:.5f}")
         results[cid] = FLResult(jax.device_get(params), np.array(hist),
-                                cents, assigns)
+                                cents, assigns,
+                                held_ids if len(held_ids) else None)
     return results
 
 
@@ -181,3 +357,14 @@ def evaluate_global(params, x_test: np.ndarray, y_test: np.ndarray,
         "accuracy": float(np.clip(100.0 - 100.0 * ape.mean(), 0, 100)),
         "per_horizon_accuracy": np.clip(per_h, 0, 100),
     }
+
+
+def evaluate_unseen_clients(params, series: np.ndarray,
+                            cfg: ForecasterConfig,
+                            batch: int = 8192) -> Dict[str, float]:
+    """Unseen-CLIENT generalization (paper §5.4): run the full windowing
+    pipeline on buildings never seen in training and score their *test*
+    windows in kWh space.  series: (n_held, T) raw kWh."""
+    data = windows.batched_client_windows(series, cfg.lookback, cfg.horizon)
+    x, y, stats = windows.flatten_test_windows(data)
+    return evaluate_global(params, x, y, cfg, stats=stats, batch=batch)

@@ -21,6 +21,9 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,3 +66,21 @@ def outer_step(params, state: OuterState, cfg: LocalSGDConfig,
 def fedavg_outer(params, axis: str = "pod"):
     """Plain FedAvg across pods (outer_lr=1, no momentum)."""
     return jax.tree.map(lambda p: jax.lax.pmean(p, axis), params)
+
+
+def make_sharded_outer(mesh, cfg: LocalSGDConfig, axis: str = "pod"):
+    """Jitted cross-pod sync: ``sync(stacked_local_params, outer_state) ->
+    (new_anchor, new_state)``.
+
+    ``stacked_local_params`` carries one (possibly divergent) parameter tree
+    per pod on a leading axis of size ``mesh.shape[axis]``; that axis is
+    sharded over ``axis`` so each pod sees only its own slice, and the
+    cross-pod ``pmean`` inside :func:`outer_step` does the actual averaging.
+    The outer state and returned anchor are replicated (version-portable via
+    ``repro.sharding.shard_map``)."""
+    def body(stacked_local_params, state):
+        mine = jax.tree.map(lambda w: w[0], stacked_local_params)
+        return outer_step(mine, state, cfg, axis)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                             out_specs=(P(), P()), check_vma=False))

@@ -10,6 +10,8 @@ next-token prediction, exposed as ``weighted_ce``.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -37,7 +39,11 @@ def ew_mse(pred, target, beta: float = 2.0):
     return jnp.mean(d * d * w)
 
 
+@functools.lru_cache(maxsize=None)
 def make_loss(name: str, beta: float = 2.0):
+    """Loss factory, cached on (name, beta) so repeated callers (e.g. one
+    RoundEngine per sweep configuration) share ONE callable — and therefore
+    one jit/shard_map trace of every round function keyed on it."""
     if name == "mse":
         return mse
     if name == "ew_mse":

@@ -12,6 +12,22 @@ def sample_clients(rng: np.random.Generator, n_clients: int, m: int) -> np.ndarr
     return rng.choice(n_clients, size=m, replace=False)
 
 
+def holdout_clients(rng: np.random.Generator, n_clients: int,
+                    holdout_frac: float):
+    """Client-level train/holdout split for unseen-client generalization.
+
+    Returns (train_ids, held_ids), both sorted.  held_ids clients never
+    participate in training; evaluating on their windows measures transfer to
+    buildings the model has NEVER seen (paper §5.4), a strictly harder test
+    than held-out windows of training clients.
+    """
+    n_held = int(round(n_clients * holdout_frac))
+    if n_held <= 0:
+        return np.arange(n_clients), np.empty(0, np.int64)
+    perm = rng.permutation(n_clients)
+    return np.sort(perm[n_held:]), np.sort(perm[:n_held])
+
+
 def cluster_partition(assignments: np.ndarray) -> Dict[int, np.ndarray]:
     """cluster id -> client indices."""
     return {int(c): np.flatnonzero(assignments == c)

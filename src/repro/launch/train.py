@@ -1,8 +1,9 @@
 """FL training driver — the paper's end-to-end pipeline as a CLI.
 
 Generates the OpenEIA-calibrated corpus for a state, optionally clusters
-clients, trains per-cluster FedAvg models (LSTM/GRU × MSE/EW-MSE), and
-evaluates on a large held-out population, mirroring §4/§5 of the paper.
+clients, trains per-cluster federated models (LSTM/GRU × MSE/EW-MSE × any
+``--server-opt`` round-engine rule), and evaluates on a large held-out
+population, mirroring §4/§5 of the paper.
 
   PYTHONPATH=src python -m repro.launch.train --state CA --rounds 100 \
       --clusters 4 --loss ew_mse --beta 2 --cell lstm --heldout 500
@@ -17,6 +18,8 @@ import numpy as np
 
 from repro.configs.base import FLConfig, ForecasterConfig
 from repro.core import clustering, fedavg
+from repro.core.sampling import SAMPLING_STRATEGIES
+from repro.core.server_opt import SERVER_OPTS
 from repro.data import synthetic, windows
 
 
@@ -36,6 +39,13 @@ def main():
     ap.add_argument("--beta", type=float, default=2.0)
     ap.add_argument("--clusters", type=int, default=0,
                     help="K-means k (0 = single global model)")
+    ap.add_argument("--server-opt", default="fedavg", choices=SERVER_OPTS,
+                    help="round-engine server update rule")
+    ap.add_argument("--server-lr", type=float, default=1.0)
+    ap.add_argument("--prox-mu", type=float, default=0.0,
+                    help="FedProx proximal strength")
+    ap.add_argument("--sampling", default="uniform",
+                    choices=SAMPLING_STRATEGIES)
     ap.add_argument("--heldout", type=int, default=200,
                     help="# held-out buildings for evaluation")
     ap.add_argument("--days", type=int, default=365)
@@ -50,7 +60,9 @@ def main():
         local_epochs=args.local_epochs, batch_size=args.batch_size,
         rounds=args.rounds, lr=args.lr, loss=args.loss, beta=args.beta,
         n_clusters=args.clusters, seed=args.seed,
-        cluster_days=min(273, int(args.days * 0.75)))
+        cluster_days=min(273, int(args.days * 0.75)),
+        server_opt=args.server_opt, server_lr=args.server_lr,
+        prox_mu=args.prox_mu, sampling=args.sampling)
 
     t0 = time.time()
     print(f"[train] generating {args.clients} train buildings ({args.state})")

@@ -1,0 +1,35 @@
+"""jax version compatibility for ``shard_map``.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (jax <= 0.4.x, where
+its replication-check kwarg is ``check_rep``) to ``jax.shard_map`` (jax >=
+0.5, kwarg renamed ``check_vma``).  Everything in this repo goes through
+:func:`shard_map` below so core code and tests run unchanged on both: pass
+``check_vma=...`` and it is forwarded under whichever name the installed jax
+understands.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+try:                                       # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+except ImportError:                        # pragma: no cover - removed in 0.6+
+    _experimental_shard_map = None
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """Version-portable ``shard_map(f, mesh=..., in_specs=..., out_specs=...)``.
+
+    ``check_vma`` (new-style name; old jax calls it ``check_rep``) is only
+    forwarded when explicitly given, so each jax version keeps its default.
+    """
+    kwargs = {} if check_vma is None else {"check_vma": check_vma}
+    if hasattr(jax, "shard_map"):          # jax >= 0.5
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    if check_vma is not None:              # old name for the same knob
+        kwargs = {"check_rep": check_vma}
+    return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, **kwargs)

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+# Forces 8 virtual CPU devices BEFORE jax initializes so the multi-device
+# shard_map tests (clients sharded over a real >1-device mesh) actually
+# exercise cross-shard psum aggregation on a laptop/CI box (olmax idiom).
+#
+#   ./test.sh                 # fast default suite (slow tests deselected)
+#   ./test.sh -m slow         # only the slow sweeps
+#   ./test.sh -m ""           # everything
+#   ./test.sh tests/test_server_opt.py -k shard_map
+set -euo pipefail
+cd "$(dirname "$0")"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

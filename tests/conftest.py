@@ -1,9 +1,12 @@
 """Test session setup.
 
-Locks the jax backend to the single real CPU device BEFORE any test module
-can import something that fiddles with XLA_FLAGS (the dry-run launcher sets
---xla_force_host_platform_device_count=512 for itself; tests must never see
-that).
+Locks the jax backend BEFORE any test module can import something that
+fiddles with XLA_FLAGS mid-session (the dry-run launcher sets
+--xla_force_host_platform_device_count=512 for itself; tests must never pick
+that up after the fact).  The device count itself comes from the
+environment: plain ``pytest`` runs single-device, while ``./test.sh``
+exports ``--xla_force_host_platform_device_count=8`` up front so the
+multi-device shard_map tests run on real (virtual) meshes.
 """
 import jax
 

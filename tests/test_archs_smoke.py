@@ -14,6 +14,12 @@ from repro.models import transformer as tf
 
 B, S = 2, 64
 
+# the widest reduced configs still cost ~10s of XLA compile each on CPU;
+# they run under -m slow, the rest stay in the fast default suite
+HEAVY_ARCHS = {"deepseek-v3-671b", "xlstm-1.3b", "codeqwen1.5-7b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in HEAVY_ARCHS
+               else a for a in ARCH_IDS]
+
 
 def _batch(cfg, rng, with_labels=True):
     if cfg.arch_type == "audio":
@@ -55,6 +61,7 @@ def test_reduced_config_invariants(arch):
     assert full.num_params() > cfg.num_params()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch):
     cfg = get_config(arch).reduced()
@@ -72,7 +79,7 @@ def test_train_step_smoke(arch):
     assert delta > 0.0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_shapes_and_finite(arch):
     cfg = get_config(arch).reduced()
     rng = np.random.default_rng(1)
@@ -88,6 +95,7 @@ def test_forward_shapes_and_finite(arch):
     assert np.isfinite(float(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_prefill_decode_consistency(arch):
     """decode_step against a prefilled cache == full forward's last logits."""
@@ -123,6 +131,7 @@ def test_prefill_decode_consistency(arch):
     assert float(jnp.max(jnp.abs(a - b))) < 1e-2 * max(scale, 1.0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-72b", "zamba2-7b", "xlstm-1.3b"])
 def test_multi_step_decode(arch):
     """Three consecutive decode steps track the full forward."""
@@ -145,6 +154,7 @@ def test_multi_step_decode(arch):
         assert err < 5e-2, (t, err)
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_matches_windowed_forward():
     """Ring-buffer sliding-window decode == full forward with same window."""
     cfg = get_config("qwen3-14b").reduced()

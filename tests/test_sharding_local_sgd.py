@@ -8,7 +8,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import local_sgd, sarima
 from repro.data import synthetic
 from repro.launch import costmodel
-from repro.sharding import ShardingRules, constrain, use_rules
+from repro.sharding import ShardingRules, constrain, shard_map, use_rules
 from repro.sharding.rules import safe_spec
 
 
@@ -52,7 +52,7 @@ def test_fedavg_outer_is_pmean():
         return local_sgd.fedavg_outer(p, "pod")
 
     p = {"w": jnp.arange(4.0)}
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(),
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(),
                                 out_specs=P()))(p)
     np.testing.assert_allclose(out["w"], p["w"])          # 1 pod: identity
 
@@ -70,7 +70,7 @@ def test_outer_step_plain_fedavg_semantics():
         new_anchor, _ = local_sgd.outer_step(local_p, st, cfg, "pod")
         return new_anchor
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(),
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(),
                                 out_specs=P()))(local)
     np.testing.assert_allclose(out["w"], 2.0)             # = mean of locals
 
@@ -88,9 +88,37 @@ def test_outer_momentum_accumulates():
         return a1, a2
 
     local = {"w": jnp.ones(2)}
-    a1, a2 = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(),
+    a1, a2 = jax.jit(shard_map(f, mesh=mesh, in_specs=P(),
                                    out_specs=P()))(local)
     assert abs(float(a2["w"][0])) > abs(float(a1["w"][0]))
+
+
+def test_make_sharded_outer_single_pod_matches_outer_step():
+    """1-pod mesh: the sharded sync == a direct outer_step on that pod."""
+    mesh = jax.make_mesh((1,), ("pod",))
+    cfg = local_sgd.LocalSGDConfig(outer_lr=1.0, outer_momentum=0.0,
+                                   nesterov=False)
+    anchor = {"w": jnp.zeros(3)}
+    state = local_sgd.init_outer_state(anchor)
+    local = {"w": jnp.ones((1, 3)) * 2.0}       # (n_pods=1, ...) stacked
+    sync = local_sgd.make_sharded_outer(mesh, cfg)
+    new_anchor, _ = sync(local, state)
+    np.testing.assert_allclose(new_anchor["w"], 2.0)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs multi-device CPU (run via ./test.sh)")
+def test_make_sharded_outer_averages_divergent_pods():
+    """2-pod mesh: pods that drifted apart sync to the cross-pod mean."""
+    mesh = jax.make_mesh((2,), ("pod",))
+    cfg = local_sgd.LocalSGDConfig(outer_lr=1.0, outer_momentum=0.0,
+                                   nesterov=False)
+    anchor = {"w": jnp.zeros(4)}
+    state = local_sgd.init_outer_state(anchor)
+    local = {"w": jnp.stack([jnp.full(4, 1.0), jnp.full(4, 3.0)])}
+    sync = local_sgd.make_sharded_outer(mesh, cfg)
+    new_anchor, _ = sync(local, state)
+    np.testing.assert_allclose(new_anchor["w"], 2.0)      # mean of 1 and 3
 
 
 # ------------------------------------------------------------- cost model

@@ -21,6 +21,7 @@ def xcfg():
     return get_config("xlstm-1.3b").reduced()
 
 
+@pytest.mark.slow
 def test_ssd_chunk_size_invariance(zcfg):
     """The chunked scan must be algebraically independent of chunk size."""
     p = ssm_mod.init_ssm(jax.random.PRNGKey(0), zcfg)
@@ -37,6 +38,7 @@ def test_ssd_chunk_size_invariance(zcfg):
         np.testing.assert_allclose(s, outs[0][1], rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_forward_matches_stepwise_decode(zcfg):
     p = ssm_mod.init_ssm(jax.random.PRNGKey(1), zcfg)
     r = np.random.default_rng(1)
@@ -53,6 +55,7 @@ def test_ssd_forward_matches_stepwise_decode(zcfg):
     np.testing.assert_allclose(st_f["ssm"], st["ssm"], rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_mlstm_forward_matches_recurrent(xcfg):
     p = xm.init_mlstm(jax.random.PRNGKey(2), xcfg)
     r = np.random.default_rng(2)
@@ -69,6 +72,7 @@ def test_mlstm_forward_matches_recurrent(xcfg):
     np.testing.assert_allclose(st_f["C"], st["C"], rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_slstm_forward_matches_recurrent(xcfg):
     p = xm.init_slstm(jax.random.PRNGKey(3), xcfg)
     r = np.random.default_rng(3)
