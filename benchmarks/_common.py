@@ -116,7 +116,8 @@ def _clean(met):
 
 
 def heldout_eval(params_result, state, fcfg, ids, days):
-    held = synthetic.generate_buildings(state, ids, days=days)
-    data = windows.batched_client_windows(held, fcfg.lookback, fcfg.horizon)
-    x, y, stats = windows.flatten_test_windows(data)
-    return fedavg.evaluate_global(params_result, x, y, fcfg, stats=stats)
+    """Streamed held-out eval: buildings generate + window on demand, so the
+    held-out population size is bounded by disk-free patience, not RAM."""
+    prov = windows.ClientWindowProvider.from_synthetic(
+        state, ids, fcfg.lookback, fcfg.horizon, days=days)
+    return fedavg.evaluate_unseen_clients(params_result, prov, fcfg)

@@ -7,11 +7,16 @@ engine's server-optimizer axis and an unseen-CLIENT generalization report:
 buildings held out of training entirely (``--holdout-frac``) and fresh
 buildings from every state, scored with no client-side retraining (§5.4).
 
+``--ragged`` gives every building a different history length (new deployments
+next to year-old ones) — the regime where sample-count-weighted aggregation
+and weighted sampling actually differ from uniform; training then runs
+through the streaming ``ClientWindowProvider`` with count-masked windows.
+
   PYTHONPATH=src python examples/fl_forecasting_e2e.py [--rounds 60]
   PYTHONPATH=src python examples/fl_forecasting_e2e.py \
       --server-opt fedadam --server-lr 0.05
   PYTHONPATH=src python examples/fl_forecasting_e2e.py \
-      --server-opt fedprox --prox-mu 0.01 --sampling weighted
+      --ragged --server-opt fedavg_weighted --sampling weighted
 """
 import argparse
 
@@ -22,6 +27,7 @@ from repro.core import clustering, fedavg
 from repro.core.sampling import SAMPLING_STRATEGIES
 from repro.core.server_opt import SERVER_OPTS
 from repro.data import synthetic, windows
+from repro.data.windows import ClientWindowProvider
 
 
 def main():
@@ -45,12 +51,34 @@ def main():
                          "unseen-client eval (0 keeps the paper's exact "
                          "training population; fresh-building transfer is "
                          "reported either way)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="give each building a different history length "
+                         "(1/3 .. 1x of --days): sample-count weighting and "
+                         "weighted sampling become material, and training "
+                         "streams through the ClientWindowProvider")
     args = ap.parse_args()
 
-    series = synthetic.generate_buildings(args.state,
-                                          list(range(args.clients)),
-                                          days=args.days)
     fcfg = ForecasterConfig(cell="lstm", hidden_dim=64)
+    if args.ragged:
+        dr = np.random.default_rng(7)
+        days_i = dr.integers(max(20, args.days // 3), args.days + 1,
+                             size=args.clients)
+        series = [synthetic.generate_buildings(args.state, [i],
+                                               days=int(d))[0]
+                  for i, d in enumerate(days_i)]
+        # full-participation training revisits every client each round, so
+        # cache all of them (the raw series are in memory anyway)
+        train_data = ClientWindowProvider.from_series(
+            series, fcfg.lookback, fcfg.horizon, cache_size=args.clients)
+        c = train_data.train_counts
+        print(f"== ragged histories: {args.clients} clients, train windows "
+              f"min/median/max = {c.min()}/{int(np.median(c))}/{c.max()} "
+              f"(count-masked streaming batches)")
+    else:
+        series = synthetic.generate_buildings(args.state,
+                                              list(range(args.clients)),
+                                              days=args.days)
+        train_data = series
     base = dict(n_clients=args.clients, clients_per_round=args.clients,
                 rounds=args.rounds, lr=0.05, loss="ew_mse", beta=2.0,
                 cluster_days=min(273, int(args.days * 0.75)),
@@ -61,11 +89,11 @@ def main():
     print(f"== clustered FL ({args.clients} clients → 4 clusters, "
           f"server_opt={args.server_opt}, sampling={args.sampling})")
     res_c = fedavg.run_federated_training(
-        series, fcfg, FLConfig(**base, n_clusters=4),
+        train_data, fcfg, FLConfig(**base, n_clusters=4),
         log_every=args.rounds // 2)
     print("== global FL (no clustering)")
     res_g = fedavg.run_federated_training(
-        series, fcfg, FLConfig(**base, n_clusters=0),
+        train_data, fcfg, FLConfig(**base, n_clusters=0),
         log_every=args.rounds // 2)
 
     held = synthetic.generate_buildings(
@@ -100,7 +128,8 @@ def main():
     print("\n== unseen-client generalization (global model, no retraining)")
     held_ids = res_g[-1].heldout_clients
     if held_ids is not None:
-        m = fedavg.evaluate_unseen_clients(res_g[-1].params, series[held_ids],
+        m = fedavg.evaluate_unseen_clients(res_g[-1].params,
+                                           [series[i] for i in held_ids],
                                            fcfg)
         print(f"{args.state} held-out clients ({len(held_ids)} never "
               f"trained): accuracy {m['accuracy']:.2f}%  rmse {m['rmse']:.3f}")

@@ -194,7 +194,8 @@ class RoundEngine:
         self.loss = loss if loss is not None else losses_mod.make_loss(
             flcfg.loss, flcfg.beta)
         self.mesh, self.cell_impl = mesh, cell_impl
-        self.sampler = sampling_mod.make_sampler(flcfg.sampling)
+        self.sampler = sampling_mod.make_sampler(flcfg.sampling,
+                                                 seed=flcfg.seed)
         # proximal term only under fedprox (prox_mu is ignored otherwise)
         self.prox_mu = flcfg.prox_mu if flcfg.server_opt == "fedprox" else 0.0
         self.weighted = server_opt_mod.uses_weighted_aggregation(flcfg)
@@ -215,12 +216,14 @@ class RoundEngine:
         """One full round on already-selected client data.
 
         x: (M, n_win, L, 1); y: (M, n_win, H); batch_idx: (M, steps, B);
-        weights: (M,) per-client sample counts.  Returns
+        weights: (M,) per-client sample counts — zero marks mesh-padding
+        duplicates, which are excluded from aggregation AND loss on both the
+        uniform and weighted paths.  Returns
         ``(new params, new server state, round loss)``.
         """
         w = jnp.asarray(weights, jnp.float32)
-        if not self.weighted:             # uniform aggregation
-            w = jnp.ones_like(w)
+        if not self.weighted:             # uniform aggregation (pads stay 0)
+            w = (w > 0).astype(jnp.float32)
         lr = jnp.float32(self.flcfg.lr)
         mu = jnp.float32(self.prox_mu)
         if self._sharded is not None:
@@ -243,44 +246,66 @@ class FLResult:
     heldout_clients: Optional[np.ndarray] = None
 
 
-def run_federated_training(all_series: np.ndarray, fcfg: ForecasterConfig,
+def _seed_rngs(seed: int):
+    """Independent (holdout, round) rng streams.
+
+    ``SeedSequence.spawn`` derives decorrelated child streams from one root
+    seed, so the holdout permutation can NOT replay as the first round's
+    client selection (which it did when both were ``default_rng(seed)``).
+    """
+    hold_ss, round_ss = np.random.SeedSequence(seed).spawn(2)
+    return np.random.default_rng(hold_ss), np.random.default_rng(round_ss)
+
+
+def _as_provider(data, fcfg: ForecasterConfig) -> windows.ClientWindowProvider:
+    if isinstance(data, windows.ClientWindowProvider):
+        return data
+    # in-memory sources window each client at most once: the raw series are
+    # already resident, so caching all N clients costs no more than the old
+    # materialize-everything path did, and full-participation configs
+    # (clients_per_round == N) would thrash any smaller LRU every round
+    return windows.ClientWindowProvider.from_series(
+        data, fcfg.lookback, fcfg.horizon, cache_size=len(data))
+
+
+def run_federated_training(all_series, fcfg: ForecasterConfig,
                            flcfg: FLConfig, *, mesh=None,
                            log_every: int = 0) -> Dict[int, FLResult]:
     """Full Alg. 1 via the round engine: optional client holdout, optional
     clustering, then per-cluster federated training.
 
-    all_series: (N, T) raw kWh, one row per client.  When
+    all_series: (N, T) raw kWh (one row per client), a ragged list of (T_i,)
+    series, or a ``windows.ClientWindowProvider`` — everything is routed
+    through the provider, so each round fetches/normalizes/windows ONLY the
+    ``m`` selected clients (host→device traffic O(m), never O(N)).  When
     ``flcfg.holdout_frac > 0`` that fraction of clients is excluded from
     training entirely (unseen-client generalization split; their indices are
     reported on every ``FLResult.heldout_clients``).  Returns
     {cluster_id: FLResult}; cluster_id = -1 when clustering is off.
     """
-    rng = np.random.default_rng(flcfg.seed)
+    provider = _as_provider(all_series, fcfg)
+    holdout_rng, rng = _seed_rngs(flcfg.seed)
     engine = RoundEngine(fcfg, flcfg, mesh=mesh)
-    data = windows.batched_client_windows(all_series, fcfg.lookback,
-                                          fcfg.horizon)
-    x_tr, y_tr = data["x_train"], data["y_train"]   # (N, n_win, L, 1), (N, n_win, H)
-    n_win = x_tr.shape[1]
-    steps = partition.local_steps(n_win, flcfg.batch_size, flcfg.local_epochs)
+    steps = partition.local_steps(provider.n_win_max, flcfg.batch_size,
+                                  flcfg.local_epochs)
 
-    n_total = all_series.shape[0]
+    n_total = provider.n_clients
     train_ids, held_ids = partition.holdout_clients(
-        np.random.default_rng(flcfg.seed), n_total, flcfg.holdout_frac)
+        holdout_rng, n_total, flcfg.holdout_frac)
     if len(train_ids) == 0:
         raise ValueError(
             f"holdout_frac={flcfg.holdout_frac} leaves no training clients "
             f"(n_clients={n_total})")
-    # Per-client sample counts: aggregation + sampling weights.  NOTE: every
-    # synthetic client has a full year of history, so counts are equal and
-    # fedavg_weighted / weighted sampling coincide with uniform HERE — the
-    # weighting becomes material with variable-length client histories
-    # (real deployments, future ragged-window loaders).
-    counts = np.full(n_total, n_win, np.float32)
+    # Per-client sample counts: aggregation + sampling weights.  With ragged
+    # histories these differ across clients, which is exactly when
+    # fedavg_weighted / weighted sampling depart from uniform.
+    counts = provider.train_counts.astype(np.float32)
+    n_dev = 1 if mesh is None else int(
+        np.prod([mesh.shape[a] for a in mesh.axis_names]))
 
     # -------- optional privacy-preserving clustering (server side, Alg. 1)
     if flcfg.n_clusters > 1:
-        z = windows.daily_average_vector(all_series[train_ids],
-                                         flcfg.cluster_days)
+        z = provider.daily_summary(train_ids, flcfg.cluster_days)
         cents, train_assigns, _ = clustering.kmeans(z, flcfg.n_clusters,
                                                     seed=flcfg.seed)
         groups = {cid: train_ids[m] for cid, m in
@@ -298,16 +323,21 @@ def run_federated_training(all_series: np.ndarray, fcfg: ForecasterConfig,
         params, sstate = engine.init(key)
         hist = []
         m = min(flcfg.clients_per_round, len(members))
-        if mesh is not None:                         # pad to mesh divisibility
-            n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-            m = max(n_dev, (m // n_dev) * n_dev)
+        # mesh divisibility: round UP and pad the selection (never train
+        # fewer clients than configured); pads are cycled duplicates that
+        # enter the round with weight 0, so the math is unchanged
+        m_run = -(-m // n_dev) * n_dev
         for t in range(flcfg.rounds):
             sel = engine.select(rng, members, m, t, counts[members])
-            bidx = rng.integers(0, n_win, size=(len(sel), steps,
-                                                flcfg.batch_size))
+            bidx = partition.ragged_minibatch_indices(
+                rng, counts[sel], steps, flcfg.batch_size)
+            pad_idx = np.resize(np.arange(len(sel)), m_run)
+            x, y, c_sel = provider.round_batch(sel[pad_idx])
+            w = c_sel.copy()
+            w[len(sel):] = 0.0                        # mask padding clients
             params, sstate, l = engine.step(
-                params, sstate, jnp.asarray(x_tr[sel]), jnp.asarray(y_tr[sel]),
-                jnp.asarray(bidx), counts[sel])
+                params, sstate, jnp.asarray(x), jnp.asarray(y),
+                jnp.asarray(bidx[pad_idx]), w)
             hist.append(float(l))
             if log_every and (t + 1) % log_every == 0:
                 print(f"[cluster {cid}] round {t+1}/{flcfg.rounds} "
@@ -324,6 +354,72 @@ def _predict(params, x, cfg, cell_impl="jnp"):
     return forecaster.forecast(params, x, cfg, cell_impl)
 
 
+class MetricAccumulator:
+    """Streaming RMSE / MAPE / Accuracy (§4.5) over window batches.
+
+    Accumulates sufficient statistics (Σ squared error, Σ APE, per-horizon
+    Σ APE, counts) so million-window evaluations never hold predictions for
+    more than one batch; ``result()`` matches the formerly-monolithic
+    ``evaluate_global`` math exactly.  The APE epsilon is the ONE shared
+    ``losses.MAPE_EPS``, pinning jnp- and np-path metric parity.
+    """
+
+    def __init__(self, horizon: int):
+        self.sse = 0.0
+        self.ape_sum = np.zeros(horizon, np.float64)
+        self.rows = 0
+
+    def update(self, pred: np.ndarray, y: np.ndarray):
+        """pred/y: (n, H) in the space metrics should be computed in."""
+        d = (pred - y).astype(np.float64)
+        self.sse += float((d * d).sum())
+        ape = np.abs((y - pred) /
+                     np.maximum(np.abs(y), losses_mod.MAPE_EPS))
+        self.ape_sum += ape.sum(axis=0, dtype=np.float64)
+        self.rows += pred.shape[0]
+
+    def result(self) -> Dict[str, float]:
+        if self.rows == 0:
+            raise ValueError("no evaluation windows accumulated (empty ids "
+                             "or 0-client provider)")
+        h = len(self.ape_sum)
+        mean_ape = self.ape_sum.sum() / (self.rows * h)
+        per_h = 100.0 - 100.0 * self.ape_sum / self.rows
+        return {
+            "rmse": float(np.sqrt(self.sse / (self.rows * h))),
+            "mape": float(100.0 * mean_ape),
+            "accuracy": float(np.clip(100.0 - 100.0 * mean_ape, 0, 100)),
+            "per_horizon_accuracy": np.clip(per_h, 0, 100),
+        }
+
+
+def _predict_denorm(params, x, cfg, stats=None, batch: int = 8192):
+    """Predict a flat window batch in device sub-batches; de-normalize to kWh
+    when per-row (lo, hi) ``stats`` are given.  Returns (pred, y-transform).
+
+    Sub-batches are zero-padded up to the next power of two so the jitted
+    forecaster sees a bounded set of shapes (≤ log2(batch) traces total) —
+    without this, ragged streamed eval presents a fresh remainder shape
+    almost every client chunk and XLA recompiles per chunk.
+    """
+    n = x.shape[0]
+    preds = []
+    for i in range(0, n, batch):
+        xb = x[i:i + batch]
+        nb = xb.shape[0]
+        nb_pad = 1 << max(nb - 1, 0).bit_length()      # next power of two
+        if nb_pad > nb:
+            xb = np.concatenate(
+                [xb, np.zeros((nb_pad - nb,) + xb.shape[1:], xb.dtype)])
+        preds.append(np.asarray(_predict(params, jnp.asarray(xb),
+                                         cfg))[:nb])
+    pred = np.concatenate(preds)
+    if stats is None:
+        return pred, lambda y: y
+    return (windows.denormalize(pred, stats),
+            lambda y: windows.denormalize(y, stats))
+
+
 def evaluate_global(params, x_test: np.ndarray, y_test: np.ndarray,
                     cfg: ForecasterConfig, stats=None,
                     batch: int = 8192) -> Dict[str, float]:
@@ -336,35 +432,24 @@ def evaluate_global(params, x_test: np.ndarray, y_test: np.ndarray,
     makes MAPE-based accuracy meaningful.
     Returns RMSE / MAPE / Accuracy (§4.5) + per-horizon accuracy (Table 4).
     """
-    n = x_test.shape[0]
-    preds = []
-    for i in range(0, n, batch):
-        preds.append(np.asarray(_predict(params, jnp.asarray(x_test[i:i + batch]),
-                                         cfg)))
-    pred = np.concatenate(preds)
-    y = y_test
-    if stats is not None:
-        lo, hi = stats
-        scale = np.maximum(hi - lo, 1e-9)
-        pred = pred * scale + lo
-        y = y * scale + lo
-    eps = 1e-2
-    ape = np.abs((y - pred) / np.maximum(np.abs(y), eps))
-    per_h = 100.0 - 100.0 * ape.mean(0)
-    return {
-        "rmse": float(np.sqrt(((pred - y) ** 2).mean())),
-        "mape": float(100.0 * ape.mean()),
-        "accuracy": float(np.clip(100.0 - 100.0 * ape.mean(), 0, 100)),
-        "per_horizon_accuracy": np.clip(per_h, 0, 100),
-    }
+    acc = MetricAccumulator(cfg.horizon)
+    pred, to_space = _predict_denorm(params, x_test, cfg, stats, batch)
+    acc.update(pred, to_space(y_test))
+    return acc.result()
 
 
-def evaluate_unseen_clients(params, series: np.ndarray,
-                            cfg: ForecasterConfig,
-                            batch: int = 8192) -> Dict[str, float]:
+def evaluate_unseen_clients(params, series, cfg: ForecasterConfig,
+                            batch: int = 8192, ids=None,
+                            clients_per_chunk: int = 64) -> Dict[str, float]:
     """Unseen-CLIENT generalization (paper §5.4): run the full windowing
     pipeline on buildings never seen in training and score their *test*
-    windows in kWh space.  series: (n_held, T) raw kWh."""
-    data = windows.batched_client_windows(series, cfg.lookback, cfg.horizon)
-    x, y, stats = windows.flatten_test_windows(data)
-    return evaluate_global(params, x, y, cfg, stats=stats, batch=batch)
+    windows in kWh space.  ``series`` is (n_held, T) raw kWh, a ragged list,
+    or a ``ClientWindowProvider`` (then ``ids`` restricts which clients to
+    score).  Clients stream through in chunks, so arbitrarily large held-out
+    populations evaluate in O(chunk) memory."""
+    provider = _as_provider(series, cfg)
+    acc = MetricAccumulator(cfg.horizon)
+    for x, y, stats in provider.iter_test_flat(ids, clients_per_chunk):
+        pred, to_space = _predict_denorm(params, x, cfg, stats, batch)
+        acc.update(pred, to_space(y))
+    return acc.result()

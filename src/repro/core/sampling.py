@@ -22,6 +22,7 @@ weights=None) -> np.ndarray`` of exactly ``m`` client ids from ``members``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Optional
 
 import numpy as np
@@ -64,10 +65,19 @@ def weighted_sampler(rng: np.random.Generator, members: np.ndarray, m: int,
 
 
 def round_robin_sampler(rng: np.random.Generator, members: np.ndarray, m: int,
-                        round_idx: int, weights: Optional[np.ndarray] = None
-                        ) -> np.ndarray:
+                        round_idx: int, weights: Optional[np.ndarray] = None,
+                        *, seed: int = 0) -> np.ndarray:
+    """Cyclic schedule over a seed-shuffled ordering of ``members``.
+
+    The ordering must be FIXED across rounds (that is the whole point of
+    round-robin), so it cannot come from the stateful per-round ``rng`` —
+    it is derived from ``seed`` instead, which ``make_sampler`` wires to
+    ``FLConfig.seed`` so the schedule actually follows the configured seed.
+    The cyclic index keeps the exactly-``m`` contract even when
+    ``m > len(members)`` (members repeat within a round).
+    """
     n = len(members)
-    order = np.random.default_rng(0).permutation(n)
+    order = np.random.default_rng(seed).permutation(n)
     idx = (round_idx * m + np.arange(m)) % n
     return members[order[idx]]
 
@@ -76,9 +86,15 @@ _SAMPLERS = {"uniform": uniform_sampler, "weighted": weighted_sampler,
              "round_robin": round_robin_sampler}
 
 
-def make_sampler(strategy: str) -> Sampler:
-    """Resolve ``FLConfig.sampling`` to a sampler callable."""
+def make_sampler(strategy: str, seed: int = 0) -> Sampler:
+    """Resolve ``FLConfig.sampling`` to a sampler callable.
+
+    ``seed`` parameterizes schedule-type samplers (round_robin's fixed
+    ordering); rng-driven samplers ignore it and use the per-call ``rng``.
+    """
     if strategy not in _SAMPLERS:
         raise ValueError(f"unknown sampling strategy {strategy!r}; expected "
                          f"one of {SAMPLING_STRATEGIES}")
+    if strategy == "round_robin":
+        return functools.partial(round_robin_sampler, seed=seed)
     return _SAMPLERS[strategy]

@@ -1,8 +1,10 @@
 from repro.data.synthetic import STATES, generate_buildings, mean_consumption
-from repro.data.windows import (client_dataset, daily_average_vector,
+from repro.data.windows import (ClientWindowProvider, batched_client_windows,
+                                client_dataset, daily_average_vector,
                                 make_windows, minmax_normalize, train_test_split)
-from repro.data.partition import sample_clients
+from repro.data.partition import ragged_minibatch_indices, sample_clients
 
-__all__ = ["STATES", "generate_buildings", "mean_consumption", "client_dataset",
+__all__ = ["STATES", "generate_buildings", "mean_consumption",
+           "ClientWindowProvider", "batched_client_windows", "client_dataset",
            "daily_average_vector", "make_windows", "minmax_normalize",
-           "train_test_split", "sample_clients"]
+           "train_test_split", "sample_clients", "ragged_minibatch_indices"]

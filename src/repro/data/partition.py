@@ -44,6 +44,24 @@ def sample_minibatch_indices(rng: np.random.Generator, n_windows: int,
     return rng.integers(0, n_windows, size=(steps, batch))
 
 
+def ragged_minibatch_indices(rng: np.random.Generator, counts: np.ndarray,
+                             steps: int, batch: int) -> np.ndarray:
+    """(m, steps, batch) window indices with per-client count-masking.
+
+    Client i's indices are drawn in ``[0, counts[i])`` so zero-padded window
+    rows (ragged histories, ``ClientWindowProvider``) are never sampled.  The
+    equal-count fast path issues ONE ``rng.integers`` call with the same
+    bounds/shape as the historical materialized pipeline, keeping its rng
+    stream — and therefore trained params — bit-identical.
+    """
+    counts = np.asarray(counts, np.int64)
+    c0 = int(counts[0])
+    if (counts == c0).all():
+        return rng.integers(0, c0, size=(len(counts), steps, batch))
+    return np.stack([rng.integers(0, int(c), size=(steps, batch))
+                     for c in counts])
+
+
 def local_steps(n_windows: int, batch: int, epochs: int) -> int:
     """Number of SGD steps for E epochs of minibatch size B (Alg. 1 inner loop)."""
     return max(1, (n_windows + batch - 1) // batch) * epochs

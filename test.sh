@@ -6,6 +6,7 @@
 # exercise cross-shard psum aggregation on a laptop/CI box (olmax idiom).
 #
 #   ./test.sh                 # fast default suite (slow tests deselected)
+#                             # + 1-round streaming-scalability bench smoke
 #   ./test.sh -m slow         # only the slow sweeps
 #   ./test.sh -m ""           # everything
 #   ./test.sh tests/test_server_opt.py -k shard_map
@@ -13,4 +14,13 @@ set -euo pipefail
 cd "$(dirname "$0")"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q "$@"
+python -m pytest -q "$@"
+
+# Default run also smokes the streaming client-window path (1 round over a
+# 1000-client population, O(m) per round) so 10k+ scaling can't silently rot.
+if [ "$#" -eq 0 ]; then
+  echo "== bench_scalability smoke (streaming provider, 1 round)"
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_scalability.py \
+      --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke
+fi
