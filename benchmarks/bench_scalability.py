@@ -11,8 +11,20 @@ round only the ``m`` selected clients are generated/normalized/windowed,
 so the full (N, n_win, L, 1) tensor is NEVER materialized and N=10k+ runs
 on a laptop.  Reports rounds/s vs N on the (8 virtual) device mesh.
 
+**Pipeline axes** (compose with ``--clients``): ``--dp-clip C`` /
+``--dp-noise z`` / ``--quantize b`` switch on the delta-transform stack
+(per-client L2 clip -> Gaussian DP noise -> stochastic b-bit quantize,
+applied inside the round body before the collective) and ``--hier`` swaps
+the flat one-psum aggregation for the two-level edge->region->cloud
+reduction over a 2-D (``--regions``, clients) mesh.  Reports rounds/s per
+ladder point plus the accuracy/MAPE delta vs the untransformed flat
+baseline at the top point — the cost of privacy + compression in both
+wall-clock and forecast quality.
+
   python benchmarks/bench_scalability.py --clients 10000
-  python benchmarks/bench_scalability.py --clients 10000 --rounds 3 --days 365
+  python benchmarks/bench_scalability.py --clients 1000 --hier --dp-clip 1.0
+  python benchmarks/bench_scalability.py --clients 1000 \
+      --dp-clip 1.0 --dp-noise 0.5 --quantize 8 --hier --regions 2
 """
 from __future__ import annotations
 
@@ -27,7 +39,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 from benchmarks._common import scale
 from repro.configs.base import FLConfig, ForecasterConfig
-from repro.core import fedavg
+from repro.core import aggregation, fedavg
 from repro.core.server_opt import SERVER_OPTS
 from repro.data import synthetic
 from repro.data.windows import ClientWindowProvider
@@ -77,30 +89,47 @@ def run_axis(state: str, server_opt: str, prox_mu: float = 0.0):
 
 def run_scaling(state: str, max_clients: int, rounds: int = 3,
                 clients_per_round: int = 32, days: int = 120, seed: int = 0,
-                smoke: bool = False):
+                smoke: bool = False, dp_clip: float = 0.0,
+                dp_noise: float = 0.0, quantize: int = 0, hier: bool = False,
+                regions: int = 0):
     """rounds/s vs total client count N through the streaming provider.
 
-    ``smoke`` runs the single top ladder point with no compile warmup —
-    a regression canary for the streaming path, not a measurement.
+    ``dp_clip`` / ``dp_noise`` / ``quantize`` configure the delta-transform
+    stack and ``hier`` the edge->region->cloud aggregation; when any is set,
+    the top ladder point also trains the untransformed flat baseline and
+    reports the accuracy (100-MAPE) delta.  ``smoke`` runs the single top
+    ladder point with no compile warmup — a regression canary for the
+    streaming path, not a measurement.
     """
     import jax
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("clients",))
+    hier = hier or regions > 0             # --regions implies --hier
+    pipeline_on = bool(dp_clip or dp_noise or quantize or hier)
+    pipe = dict(dp_clip=dp_clip, dp_noise=dp_noise, quantize_bits=quantize,
+                aggregation="hierarchical" if hier else "flat",
+                n_regions=regions if hier else 0)
+    mesh = aggregation.make_mesh(FLConfig(**pipe).aggregation_config)
+    mesh_desc = ("x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+                 + " (" + ", ".join(mesh.axis_names) + ")")
     fcfg = ForecasterConfig(cell="lstm", hidden_dim=64)
     ladder = [max_clients] if smoke else sorted(
         {n for n in (100, 1000, 10_000, 100_000) if n < max_clients}
         | {max_clients})
     print(f"# client-count scaling — streaming ClientWindowProvider, "
-          f"{n_dev}-device mesh, m={clients_per_round}/round, "
+          f"{n_dev}-device mesh ({mesh_desc}), m={clients_per_round}/round, "
           f"{rounds} rounds, {days}-day histories")
+    if pipeline_on:
+        print(f"# delta transforms: clip={dp_clip} noise={dp_noise} "
+              f"quantize={quantize}b; aggregation={pipe['aggregation']}")
     print("n_clients,rounds,m_per_round,train_s,rounds_per_s,final_loss")
     rows = []
+    res = None
     for i, n in enumerate(ladder):
         prov = ClientWindowProvider.from_synthetic(
             state, range(n), fcfg.lookback, fcfg.horizon, days=days)
         flcfg = FLConfig(n_clients=n, clients_per_round=clients_per_round,
                          rounds=rounds, lr=0.05, loss="ew_mse", n_clusters=0,
-                         server_opt="fedavg_weighted", seed=seed)
+                         server_opt="fedavg_weighted", seed=seed, **pipe)
         if i == 0 and not smoke:
             # absorb jit compile outside the timed ladder (shapes are
             # N-independent, so one trace serves every N)
@@ -114,14 +143,45 @@ def run_scaling(state: str, max_clients: int, rounds: int = 3,
               f"{res.loss_history[-1]:.5f}")
     print("# per-round cost is O(m + model), flat in N — the provider only "
           "touches selected clients")
+    if pipeline_on and not smoke:
+        _report_pipeline_delta(state, ladder[-1], rounds, clients_per_round,
+                               days, seed, fcfg, res)
     return rows
 
 
+def _report_pipeline_delta(state, n, rounds, clients_per_round, days, seed,
+                           fcfg, res_pipe):
+    """Accuracy/MAPE cost of the configured transforms + topology: compare
+    the pipeline model against the untransformed flat baseline (same N,
+    rounds, seed) on a small held-out population."""
+    base_mesh = aggregation.make_mesh()
+    prov = ClientWindowProvider.from_synthetic(
+        state, range(n), fcfg.lookback, fcfg.horizon, days=days)
+    flcfg = FLConfig(n_clients=n, clients_per_round=clients_per_round,
+                     rounds=rounds, lr=0.05, loss="ew_mse", n_clusters=0,
+                     server_opt="fedavg_weighted", seed=seed)
+    res_base = fedavg.run_federated_training(prov, fcfg, flcfg,
+                                             mesh=base_mesh)[-1]
+    # held-out ids start right AFTER the training population so the report
+    # stays out-of-sample at every ladder size
+    held = ClientWindowProvider.from_synthetic(
+        state, range(n, n + 50), fcfg.lookback, fcfg.horizon, days=days)
+    m_pipe = fedavg.evaluate_unseen_clients(res_pipe.params, held, fcfg)
+    m_base = fedavg.evaluate_unseen_clients(res_base.params, held, fcfg)
+    print("variant,mape_pct,accuracy_pct")
+    print(f"baseline(flat),{m_base['mape']:.2f},{m_base['accuracy']:.2f}")
+    print(f"pipeline,{m_pipe['mape']:.2f},{m_pipe['accuracy']:.2f}")
+    print(f"# transform/topology cost: {m_pipe['mape']-m_base['mape']:+.2f} "
+          f"pp MAPE vs untransformed flat baseline (50 held-out buildings)")
+
+
 def main(state="CA", server_opt="fedavg", prox_mu=0.0, clients=None,
-         rounds=3, clients_per_round=32, days=120, smoke=False):
+         rounds=3, clients_per_round=32, days=120, smoke=False,
+         dp_clip=0.0, dp_noise=0.0, quantize=0, hier=False, regions=0):
     if clients:
         return run_scaling(state, clients, rounds, clients_per_round, days,
-                           smoke=smoke)
+                           smoke=smoke, dp_clip=dp_clip, dp_noise=dp_noise,
+                           quantize=quantize, hier=hier, regions=regions)
     opts = SERVER_OPTS if server_opt == "all" else (server_opt,)
     return {opt: run_axis(state, opt, prox_mu) for opt in opts}
 
@@ -142,6 +202,19 @@ if __name__ == "__main__":
                     help="per-client history length (scaling axis)")
     ap.add_argument("--smoke", action="store_true",
                     help="single ladder point, no warmup (CI canary)")
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="per-client delta L2 clip norm C (0 = off)")
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="Gaussian DP noise multiplier z (std = z*C; 0 = off)")
+    ap.add_argument("--quantize", type=int, default=0,
+                    help="stochastic b-bit delta quantization (0 = off)")
+    ap.add_argument("--hier", action="store_true",
+                    help="hierarchical edge->region->cloud aggregation over "
+                         "a 2-D (region, clients) mesh")
+    ap.add_argument("--regions", type=int, default=0,
+                    help="# of regions (implies --hier; 0 = auto from "
+                         "devices)")
     args = ap.parse_args()
     main(args.state, args.server_opt, args.prox_mu, args.clients,
-         args.rounds, args.clients_per_round, args.days, args.smoke)
+         args.rounds, args.clients_per_round, args.days, args.smoke,
+         args.dp_clip, args.dp_noise, args.quantize, args.hier, args.regions)

@@ -8,6 +8,9 @@ Sections:
   lstm_vs_gru  Fig. 4 (architecture × loss × state)
   beta         Fig. 5 (EW-MSE β ablation)
   scalability  §5.4 (generalization to large unseen populations)
+  scaling_pipeline  client-count axis with the delta-transform stack
+               (clip + DP noise + int8 quantize) and hierarchical
+               edge→region→cloud aggregation: rounds/s + MAPE delta
   edge         §5.5 (edge-cluster envelope, simulated)
   kernels      Pallas kernels vs references
   roofline     §Roofline table from the dry-run artifacts
@@ -23,6 +26,14 @@ from benchmarks import (bench_beta, bench_clustering, bench_edge,
                         bench_lstm_vs_gru, bench_roofline,
                         bench_scalability)
 
+def _scaling_pipeline():
+    """Client-count axis under the full pipeline: DP clip + noise + int8
+    quantized deltas, aggregated edge→region→cloud (2-D mesh)."""
+    return bench_scalability.main(
+        clients=1000, rounds=3, clients_per_round=16, days=60,
+        dp_clip=1.0, dp_noise=0.5, quantize=8, hier=True)
+
+
 SECTIONS = [
     ("kernels", bench_kernels.main),
     ("roofline", bench_roofline.main),
@@ -33,6 +44,7 @@ SECTIONS = [
     ("lstm_vs_gru", bench_lstm_vs_gru.main),
     ("beta", bench_beta.main),
     ("scalability", bench_scalability.main),
+    ("scaling_pipeline", _scaling_pipeline),
 ]
 
 

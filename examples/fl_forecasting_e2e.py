@@ -56,6 +56,15 @@ def main():
                          "(1/3 .. 1x of --days): sample-count weighting and "
                          "weighted sampling become material, and training "
                          "streams through the ClientWindowProvider")
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="per-client delta L2 clip norm C (0 = off)")
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="Gaussian DP noise multiplier (std = z*C; 0 = off)")
+    ap.add_argument("--quantize", type=int, default=0,
+                    help="stochastic b-bit delta quantization (0 = off)")
+    ap.add_argument("--hier", action="store_true",
+                    help="hierarchical edge->region->cloud aggregation (the "
+                         "(region, clients) mesh is built automatically)")
     args = ap.parse_args()
 
     fcfg = ForecasterConfig(cell="lstm", hidden_dim=64)
@@ -84,10 +93,16 @@ def main():
                 cluster_days=min(273, int(args.days * 0.75)),
                 server_opt=args.server_opt, server_lr=args.server_lr,
                 prox_mu=args.prox_mu, sampling=args.sampling,
-                holdout_frac=args.holdout_frac)
+                holdout_frac=args.holdout_frac, dp_clip=args.dp_clip,
+                dp_noise=args.dp_noise, quantize_bits=args.quantize,
+                aggregation="hierarchical" if args.hier else "flat")
 
+    pipe = ""
+    if args.dp_clip or args.dp_noise or args.quantize or args.hier:
+        pipe = (f", transforms clip={args.dp_clip}/noise={args.dp_noise}"
+                f"/quant={args.quantize}b, agg={base['aggregation']}")
     print(f"== clustered FL ({args.clients} clients → 4 clusters, "
-          f"server_opt={args.server_opt}, sampling={args.sampling})")
+          f"server_opt={args.server_opt}, sampling={args.sampling}{pipe})")
     res_c = fedavg.run_federated_training(
         train_data, fcfg, FLConfig(**base, n_clusters=4),
         log_every=args.rounds // 2)

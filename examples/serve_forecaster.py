@@ -5,11 +5,15 @@ hundreds of unseen consumers — the micro-grid provider's inference path
 (paper §5.4: deploy to clients with no compute for training).
 
   PYTHONPATH=src python examples/serve_forecaster.py
+  PYTHONPATH=src python examples/serve_forecaster.py --requests 1024
 """
 from repro.launch import serve
 
 if __name__ == "__main__":
     import sys
-    sys.argv = [sys.argv[0], "--train-clients", "16", "--rounds", "20",
+    # demo-sized defaults, overridable from the command line: user flags are
+    # appended AFTER the defaults, and argparse lets the last occurrence win
+    defaults = ["--train-clients", "16", "--rounds", "20",
                 "--requests", "256", "--days", "90"]
+    sys.argv = [sys.argv[0]] + defaults + sys.argv[1:]
     serve.main()

@@ -1,10 +1,14 @@
-from repro.configs.base import (FLConfig, ForecasterConfig, FrontendConfig,
-                                InputShape, INPUT_SHAPES, MLAConfig,
-                                ModelConfig, MoEConfig, SHAPES_BY_NAME,
-                                SSMConfig, XLSTMConfig)
+from repro.configs.base import (AggregationConfig, ClientOptConfig, FLConfig,
+                                ForecasterConfig, FrontendConfig, InputShape,
+                                INPUT_SHAPES, MLAConfig, ModelConfig,
+                                MoEConfig, SamplingConfig, ServerOptConfig,
+                                SHAPES_BY_NAME, SSMConfig, TransformConfig,
+                                XLSTMConfig)
 from repro.configs.registry import ARCH_IDS, all_configs, get_config
 
-__all__ = ["FLConfig", "ForecasterConfig", "FrontendConfig", "InputShape",
-           "INPUT_SHAPES", "MLAConfig", "ModelConfig", "MoEConfig",
-           "SHAPES_BY_NAME", "SSMConfig", "XLSTMConfig", "ARCH_IDS",
-           "all_configs", "get_config"]
+__all__ = ["AggregationConfig", "ClientOptConfig", "FLConfig",
+           "ForecasterConfig", "FrontendConfig", "InputShape", "INPUT_SHAPES",
+           "MLAConfig", "ModelConfig", "MoEConfig", "SamplingConfig",
+           "ServerOptConfig", "SHAPES_BY_NAME", "SSMConfig",
+           "TransformConfig", "XLSTMConfig", "ARCH_IDS", "all_configs",
+           "get_config"]

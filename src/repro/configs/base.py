@@ -232,16 +232,137 @@ class ForecasterConfig:
         return n
 
 
+# ---------------------------------------------------------------------------
+# Federated pipeline stage configs.
+#
+# One federated round is an explicit pipeline of five typed stages
+#
+#     select -> local-update -> transform(deltas) -> aggregate -> server-update
+#
+# and each stage is configured by its own frozen dataclass below.  The valid
+# names for every pluggable stage live HERE (not in the implementing core
+# module) so the ``FLConfig`` facade can validate eagerly at construction
+# without importing ``repro.core`` (which imports this module); the core
+# modules re-export them (``core/server_opt.py::SERVER_OPTS`` etc.).
+# ---------------------------------------------------------------------------
+SERVER_OPTS = ("fedavg", "fedavg_weighted", "fedprox", "fedadam", "fedyogi")
+SAMPLING_STRATEGIES = ("uniform", "weighted", "round_robin")
+AGGREGATORS = ("flat", "hierarchical")
+LOSSES = ("mse", "ew_mse")
+
+
+def _check_choice(kind: str, value: str, valid: Tuple[str, ...]) -> None:
+    if value not in valid:
+        raise ValueError(f"unknown {kind} {value!r}; valid choices: "
+                         f"{list(valid)}")
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    """Select stage: per-round client-selection scheme (``core/sampling.py``).
+
+    ``seed`` parameterizes schedule-type samplers (round_robin's fixed
+    ordering); rng-driven samplers draw from the per-call rng instead.
+    """
+    strategy: str = "uniform"          # uniform | weighted | round_robin
+    seed: int = 0
+
+    def __post_init__(self):
+        _check_choice("sampling strategy", self.strategy, SAMPLING_STRATEGIES)
+
+
+@dataclass(frozen=True)
+class ClientOptConfig:
+    """Local-update stage: E epochs of minibatch SGD (``core/client.py``)."""
+    lr: float = 1e-2
+    local_epochs: int = 1              # E
+    batch_size: int = 64               # B
+    loss: str = "ew_mse"               # "mse" | "ew_mse"
+    beta: float = 2.0                  # EW-MSE beta (>1)
+    prox_mu: float = 0.0               # FedProx proximal strength
+
+    def __post_init__(self):
+        _check_choice("loss", self.loss, LOSSES)
+
+
+@dataclass(frozen=True)
+class TransformConfig:
+    """Transform stage: per-client delta transforms (``core/transforms.py``).
+
+    Applied to each client's update ``w_i - w_global`` INSIDE the round body,
+    before the aggregation collective, in the fixed order
+    clip -> noise -> quantize.  All knobs default to off; the identity stack
+    keeps the round bit-identical to the pre-transform engine.
+    """
+    clip_norm: float = 0.0             # C: per-client delta L2 bound (0 = off)
+    noise_multiplier: float = 0.0      # Gaussian DP noise sigma/C (0 = off)
+    quantize_bits: int = 0             # stochastic int quantize (0 = off)
+
+    def __post_init__(self):
+        if self.clip_norm < 0:
+            raise ValueError(f"clip_norm must be >= 0, got {self.clip_norm}")
+        if self.noise_multiplier < 0:
+            raise ValueError("noise_multiplier must be >= 0, got "
+                             f"{self.noise_multiplier}")
+        if self.quantize_bits and not 2 <= self.quantize_bits <= 8:
+            raise ValueError("quantize_bits must be 0 (off) or in [2, 8], "
+                             f"got {self.quantize_bits}")
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.clip_norm == 0.0 and self.noise_multiplier == 0.0
+                and self.quantize_bits == 0)
+
+
+@dataclass(frozen=True)
+class AggregationConfig:
+    """Aggregate stage: cross-client reduction topology (``core/aggregation.py``).
+
+    ``flat`` is the one-psum cloud aggregation; ``hierarchical`` is the
+    two-level edge->region->cloud reduction over a 2-D (region, clients)
+    mesh.  ``n_regions=0`` lets the mesh builder pick (see
+    ``aggregation.make_hierarchical_mesh``).
+    """
+    kind: str = "flat"                 # flat | hierarchical
+    n_regions: int = 0                 # hierarchical: # of region groups
+
+    def __post_init__(self):
+        _check_choice("aggregation", self.kind, AGGREGATORS)
+        if self.n_regions < 0:
+            raise ValueError(f"n_regions must be >= 0, got {self.n_regions}")
+
+
+@dataclass(frozen=True)
+class ServerOptConfig:
+    """Server-update stage: optimizer on the pseudo-gradient
+    ``w_global - w_agg`` (``core/server_opt.py``)."""
+    name: str = "fedavg"               # fedavg | fedavg_weighted | fedprox
+    #                                  # | fedadam | fedyogi
+    lr: float = 1.0
+    momentum: float = 0.0              # >0 turns fedavg* into FedAvgM
+    beta1: float = 0.9                 # fedadam / fedyogi first moment
+    beta2: float = 0.99                # fedadam / fedyogi second moment
+    eps: float = 1e-3                  # fedadam / fedyogi adaptivity floor
+
+    def __post_init__(self):
+        _check_choice("server_opt", self.name, SERVER_OPTS)
+
+
 @dataclass(frozen=True)
 class FLConfig:
-    """Federated-learning schedule (paper Alg. 1 + §4) + round-engine knobs.
+    """Federated-learning schedule (paper Alg. 1 + §4): flat facade over the
+    typed pipeline-stage configs.
 
-    The engine knobs select the pluggable pieces of the federated round
-    (``core/server_opt.py`` / ``core/sampling.py``): ``server_opt`` picks the
-    aggregation weighting + server-side optimizer applied to the
-    pseudo-gradient ``w_global - w_agg``; ``sampling`` picks the per-round
-    client-selection scheme.  Defaults reproduce the paper exactly (uniform
-    FedAvg, uniform sampling).
+    Construction is unchanged from the original flat config (every existing
+    call site and default is preserved), but the engine consumes it through
+    the typed views — ``.sampling_config``, ``.client_opt``, ``.transform``,
+    ``.aggregation_config``, ``.server`` — one per pipeline stage
+    (select -> local-update -> transform -> aggregate -> server-update).
+    Validation is EAGER: a typo'd ``server_opt`` / ``sampling`` /
+    ``aggregation`` or out-of-range transform knob raises ``ValueError`` at
+    construction with the valid choices, instead of surfacing rounds-deep in
+    training.  Defaults reproduce the paper exactly (uniform FedAvg, uniform
+    sampling, identity transform, flat aggregation).
     """
     n_clients: int = 100               # N
     clients_per_round: int = 100       # M
@@ -266,6 +387,48 @@ class FLConfig:
     sampling: str = "uniform"          # uniform | weighted | round_robin
     holdout_frac: float = 0.0          # fraction of clients held out of
     #                                  # training for unseen-client eval
+    # --------------------------------------------- delta-transform stage
+    dp_clip: float = 0.0               # per-client delta L2 clip C (0 = off)
+    dp_noise: float = 0.0              # Gaussian noise multiplier (0 = off)
+    quantize_bits: int = 0             # stochastic int quantize (0 = off)
+    # ------------------------------------------------- aggregation stage
+    aggregation: str = "flat"          # flat | hierarchical
+    n_regions: int = 0                 # hierarchical: # of regions (0 = auto)
+
+    def __post_init__(self):
+        # materializing every typed stage view runs that stage's own
+        # validation -> bad names/knobs fail here, at construction
+        _ = (self.sampling_config, self.client_opt, self.transform,
+             self.aggregation_config, self.server)
+
+    # ------------------------------------------------- typed stage views
+    @property
+    def sampling_config(self) -> SamplingConfig:
+        return SamplingConfig(strategy=self.sampling, seed=self.seed)
+
+    @property
+    def client_opt(self) -> ClientOptConfig:
+        return ClientOptConfig(lr=self.lr, local_epochs=self.local_epochs,
+                               batch_size=self.batch_size, loss=self.loss,
+                               beta=self.beta, prox_mu=self.prox_mu)
+
+    @property
+    def transform(self) -> TransformConfig:
+        return TransformConfig(clip_norm=self.dp_clip,
+                               noise_multiplier=self.dp_noise,
+                               quantize_bits=self.quantize_bits)
+
+    @property
+    def aggregation_config(self) -> AggregationConfig:
+        return AggregationConfig(kind=self.aggregation,
+                                 n_regions=self.n_regions)
+
+    @property
+    def server(self) -> ServerOptConfig:
+        return ServerOptConfig(name=self.server_opt, lr=self.server_lr,
+                               momentum=self.server_momentum,
+                               beta1=self.server_beta1,
+                               beta2=self.server_beta2, eps=self.server_eps)
 
 
 @dataclass(frozen=True)

@@ -1,9 +1,15 @@
-"""Client-side local update (paper Alg. 1, ``ClientUpdate``).
+"""Local-update stage of the federated pipeline (paper Alg. 1,
+``ClientUpdate``): select -> **local-update** -> transform -> aggregate ->
+server-update.
 
 E epochs of minibatch SGD on the client's private windows, expressed as a
 fixed-shape ``lax.scan`` over precomputed minibatch indices so that the whole
 client population can be vmapped / shard_mapped over the ``clients`` axis —
-the TPU-native realization of "clients train in parallel".
+the TPU-native realization of "clients train in parallel".  The stage's
+schedule knobs (lr, E, B, loss, prox_mu) are carried by the typed
+``configs.base.ClientOptConfig`` (the ``FLConfig.client_opt`` facade view);
+the traced per-round values (lr, prox_mu) arrive as arguments so one jitted
+round serves every schedule.
 
 FedProx (Li et al. 2020) is supported via ``prox_mu``: the local objective
 gains ``mu/2 ||w - w_global||^2`` anchored at the round's incoming global

@@ -1,28 +1,41 @@
-"""Federated round engine (paper Alg. 1, generalized) — pseudo-distributed
-(vmap) and mesh-sharded (shard_map) execution of the same round schedule.
+"""Federated round engine (paper Alg. 1, generalized) — one explicit pipeline
+of typed stages, executed pseudo-distributed (vmap) or mesh-sharded
+(shard_map):
 
-One round: the server *selects* clients (``core/sampling.py``), broadcasts
-global params; each selected client runs ``ClientUpdate`` (E local epochs of
-minibatch SGD, optionally FedProx-regularized — ``core/client.py``); the
-server *aggregates* the returned models with per-client sample-count weights
-and applies a *server optimizer* to the pseudo-gradient ``w_global - w_agg``
-(``core/server_opt.py``).  Uniform FedAvg (``w <- (1/|s|) Σ w_i``) is the
-default configuration of that pipeline, not a special code path.
+    select -> local-update -> transform(deltas) -> aggregate -> server-update
 
-The mesh-sharded path places clients on the ``clients`` (= data) mesh axis via
-``shard_map``; aggregation is then a single ``psum`` of the (tiny) parameter
-tree — the paper's edge→cloud upload + cloud aggregation collapsed into one
-collective.  Local epochs run with NO cross-client communication, which is
+*select* picks the round's participants (``core/sampling.py``,
+``SamplingConfig``); each selected client runs ``ClientUpdate`` — E local
+epochs of minibatch SGD, optionally FedProx-regularized (``core/client.py``,
+``ClientOptConfig``); each client's update delta ``w_i - w_global`` passes
+through the *transform* stack — per-client L2 clip -> Gaussian DP noise ->
+stochastic int quantize (``core/transforms.py``, ``TransformConfig``) —
+INSIDE the round body, before any collective, so on the mesh path only
+privatized/compressed deltas ever cross shard boundaries; *aggregate* reduces
+the sample-count-weighted deltas through a pluggable topology
+(``core/aggregation.py``, ``AggregationConfig``: flat one-psum, or
+hierarchical edge->region->cloud over a 2-D (region, clients) mesh); finally
+the server applies a *server optimizer* to the pseudo-gradient
+``w_global - w_agg`` (``core/server_opt.py``, ``ServerOptConfig``) outside
+the round body, shared bit-for-bit by both execution paths.
+
+Uniform FedAvg (``w <- (1/|s|) Σ w_i``) is the default configuration of that
+pipeline, not a special code path — and with the identity transform stack the
+engine routes through the exact legacy aggregation math, so default-config
+runs are bit-identical to the pre-pipeline engine (pinned by regression
+test).  Local epochs run with NO cross-client communication, which is
 precisely what makes FedAvg cheaper on the wire than synchronous
-data-parallel SGD.  The server step runs *outside* the round body, so the
-vmap and shard_map paths share it bit-for-bit.
+data-parallel SGD.
 
-Engine selection is driven entirely by ``FLConfig``::
+Engine selection is driven entirely by the ``FLConfig`` facade::
 
-    FLConfig(server_opt="fedadam", server_lr=0.05, sampling="weighted", ...)
+    FLConfig(server_opt="fedadam", server_lr=0.05, sampling="weighted",
+             dp_clip=1.0, dp_noise=0.5, quantize_bits=8,
+             aggregation="hierarchical", n_regions=2, ...)
 
-with ``server_opt ∈ {fedavg, fedavg_weighted, fedprox, fedadam, fedyogi}``
-and ``sampling ∈ {uniform, weighted, round_robin}``.
+whose typed stage views (``.sampling_config``, ``.client_opt``,
+``.transform``, ``.aggregation_config``, ``.server``) are validated eagerly
+at construction.
 """
 from __future__ import annotations
 
@@ -35,10 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import FLConfig, ForecasterConfig
+from repro.configs.base import (AggregationConfig, FLConfig, ForecasterConfig,
+                                TransformConfig)
+from repro.core import aggregation as aggregation_mod
 from repro.core import clustering, losses as losses_mod
 from repro.core import sampling as sampling_mod
 from repro.core import server_opt as server_opt_mod
+from repro.core import transforms as transforms_mod
 from repro.core.client import local_update
 from repro.data import partition, windows
 from repro.models import forecaster
@@ -170,11 +186,93 @@ def make_sharded_engine_round(mesh, cfg: ForecasterConfig, loss: Callable,
         check_vma=False))
 
 
+# ------------------------------------------------------- pipeline execution
+def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
+                   cfg: ForecasterConfig, loss: Callable, cell_impl: str,
+                   tcfg: TransformConfig, agg: "aggregation_mod.Aggregator"):
+    """Shared local-update -> transform -> aggregate stages of one round.
+
+    Runs inside vmap (``agg = LocalAggregator``) or inside the shard_map body
+    (``agg`` = flat / hierarchical), so both execution paths and every
+    topology share ONE implementation of the stage math.  With the identity
+    transform stack the raw local models are aggregated through exactly the
+    legacy ops (bit-identical to the pre-pipeline engine); with transforms
+    the per-client deltas are transformed BEFORE the collective and the
+    aggregate is rebuilt as ``w_global + avg(transformed deltas)``.
+    """
+    locals_, client_loss = jax.vmap(
+        local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
+        params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
+    stack = transforms_mod.make_stack(tcfg)
+    if stack.is_identity:
+        sums, wsum_local = _weighted_sums(locals_, weights)
+        wsum = agg.reduce(wsum_local)
+        w_agg = jax.tree.map(lambda s: agg.reduce(s) / wsum, sums)
+    else:
+        deltas = jax.tree.map(lambda l, g: l - g, locals_, params)
+        deltas = jax.vmap(stack)(deltas, keys)
+        sums, wsum_local = _weighted_sums(deltas, weights)
+        wsum = agg.reduce(wsum_local)
+        w_agg = jax.tree.map(lambda g, s: g + agg.reduce(s) / wsum,
+                             params, sums)
+    loss_mean = agg.reduce(jnp.sum(weights * client_loss)) / wsum
+    return w_agg, loss_mean
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "loss", "tcfg", "cell_impl"))
+def pipeline_round(params, x, y, batch_idx, weights, keys, lr, prox_mu,
+                   cfg: ForecasterConfig, loss: Callable,
+                   tcfg: TransformConfig, cell_impl: str = "jnp"):
+    """Full pipeline round, pseudo-distributed (vmap) execution.
+
+    ``keys``: (M, 2) uint32 per-client PRNG keys feeding the transform stack
+    (unused — and traced away — when the stack is the identity).  Returns
+    ``(w_agg, weighted mean client loss)``; the server stage is applied by
+    the caller (``RoundEngine.step``).
+    """
+    return _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu,
+                          cfg=cfg, loss=loss, cell_impl=cell_impl, tcfg=tcfg,
+                          agg=aggregation_mod.LocalAggregator())
+
+
+@functools.lru_cache(maxsize=None)
+def make_pipeline_round(mesh, cfg: ForecasterConfig, loss: Callable,
+                        tcfg: TransformConfig = TransformConfig(),
+                        acfg: AggregationConfig = AggregationConfig(),
+                        cell_impl: str = "jnp"):
+    """Mesh-sharded pipeline round for any aggregation topology.
+
+    The aggregator supplies both the input layout (flat: clients on a 1-D
+    axis; hierarchical: leading client axis split over the 2-D
+    (region, clients) grid) and the in-body collective (one psum, or
+    edge->region->cloud psum pair).  lru_cached on the full execution
+    geometry so every engine sharing (mesh, cfg, loss, transform, topology)
+    reuses one jitted round.
+
+    ``round_fn(params, x, y, batch_idx, weights, keys, lr, prox_mu)``.
+    """
+    agg = aggregation_mod.make_aggregator(acfg, mesh)
+    pspec = agg.pspec()
+
+    def round_body(params, x, y, batch_idx, weights, keys, lr, prox_mu):
+        return _pipeline_body(params, x, y, batch_idx, weights, keys, lr,
+                              prox_mu, cfg=cfg, loss=loss,
+                              cell_impl=cell_impl, tcfg=tcfg, agg=agg)
+
+    return jax.jit(shard_map(
+        round_body, mesh=mesh,
+        in_specs=(P(), pspec, pspec, pspec, pspec, pspec, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False))
+
+
 # ------------------------------------------------------------- round engine
 class RoundEngine:
-    """Composable federated round: select → local update → aggregate → server.
+    """Composable federated round: select -> local update -> transform ->
+    aggregate -> server update.
 
-    Owns the jitted round function for ONE execution path (vmap when
+    Owns the jitted pipeline round for ONE execution path (vmap when
     ``mesh is None``, shard_map otherwise) plus the server-optimizer state,
     so round logic is unit-testable without running full training::
 
@@ -182,25 +280,38 @@ class RoundEngine:
         params, state = engine.init(jax.random.PRNGKey(0))
         sel = engine.select(rng, members, m, round_idx, member_weights)
         params, state, loss = engine.step(params, state, x[sel], y[sel],
-                                          bidx, counts[sel])
+                                          bidx, counts[sel], round_idx)
+
+    Every pluggable stage is bound from the ``FLConfig`` facade's typed
+    views; hierarchical aggregation additionally requires the mesh to carry
+    the (region, clients) axis pair (``aggregation.make_mesh``).
     """
 
     def __init__(self, fcfg: ForecasterConfig, flcfg: FLConfig, *,
                  loss: Optional[Callable] = None, mesh=None,
                  cell_impl: str = "jnp"):
-        if flcfg.server_opt not in server_opt_mod.SERVER_OPTS:
-            raise ValueError(f"unknown server_opt {flcfg.server_opt!r}")
+        # stage names/knobs were validated eagerly by the FLConfig facade
         self.fcfg, self.flcfg = fcfg, flcfg
+        ccfg = flcfg.client_opt
         self.loss = loss if loss is not None else losses_mod.make_loss(
-            flcfg.loss, flcfg.beta)
+            ccfg.loss, ccfg.beta)
         self.mesh, self.cell_impl = mesh, cell_impl
-        self.sampler = sampling_mod.make_sampler(flcfg.sampling,
-                                                 seed=flcfg.seed)
+        self.sampler = sampling_mod.make_sampler(flcfg.sampling_config)
         # proximal term only under fedprox (prox_mu is ignored otherwise)
-        self.prox_mu = flcfg.prox_mu if flcfg.server_opt == "fedprox" else 0.0
+        self.prox_mu = ccfg.prox_mu if flcfg.server_opt == "fedprox" else 0.0
         self.weighted = server_opt_mod.uses_weighted_aggregation(flcfg)
-        self._sharded = None if mesh is None else make_sharded_engine_round(
-            mesh, fcfg, self.loss, cell_impl=cell_impl)
+        self.transform = flcfg.transform
+        if mesh is None:
+            if flcfg.aggregation_config.kind != "flat":
+                raise ValueError(
+                    f"aggregation={flcfg.aggregation!r} requires a mesh "
+                    "(build one with aggregation.make_mesh); the vmap path "
+                    "has no reduction topology")
+            self._sharded = None
+        else:
+            self._sharded = make_pipeline_round(
+                mesh, fcfg, self.loss, self.transform,
+                flcfg.aggregation_config, cell_impl=cell_impl)
 
     def init(self, key):
         """Fresh global params + server-optimizer state."""
@@ -212,27 +323,46 @@ class RoundEngine:
         """Pick this round's m participants (``FLConfig.sampling``)."""
         return self.sampler(rng, np.asarray(members), m, round_idx, weights)
 
-    def step(self, params, state, x, y, batch_idx, weights):
+    def round_keys(self, round_idx: int, m: int, stream: int = 0):
+        """Per-client transform keys for one round: deterministic in
+        (``FLConfig.seed``, ``stream``, round index, selection slot), so DP
+        noise and stochastic rounding replay exactly under a fixed seed.
+
+        ``stream`` decorrelates concurrent trainings sharing one seed (the
+        driver passes the cluster id) — without it, two clusters' round-t
+        slot-i clients would draw the SAME Gaussian noise, and the
+        difference of their released aggregates would cancel the DP noise.
+        """
+        rk = jax.random.fold_in(jax.random.PRNGKey(self.flcfg.seed), stream)
+        rk = jax.random.fold_in(rk, round_idx)
+        return jax.vmap(jax.random.fold_in, (None, 0))(rk, jnp.arange(m))
+
+    def step(self, params, state, x, y, batch_idx, weights,
+             round_idx: int = 0, stream: int = 0):
         """One full round on already-selected client data.
 
         x: (M, n_win, L, 1); y: (M, n_win, H); batch_idx: (M, steps, B);
         weights: (M,) per-client sample counts — zero marks mesh-padding
         duplicates, which are excluded from aggregation AND loss on both the
-        uniform and weighted paths.  Returns
-        ``(new params, new server state, round loss)``.
+        uniform and weighted paths.  ``round_idx`` / ``stream`` seed the
+        per-client transform keys (only consumed when a transform stack is
+        configured).  Returns ``(new params, new server state, round loss)``.
         """
         w = jnp.asarray(weights, jnp.float32)
         if not self.weighted:             # uniform aggregation (pads stay 0)
             w = (w > 0).astype(jnp.float32)
         lr = jnp.float32(self.flcfg.lr)
         mu = jnp.float32(self.prox_mu)
+        keys = self.round_keys(round_idx, x.shape[0], stream)
         if self._sharded is not None:
-            w_agg, loss = self._sharded(params, x, y, batch_idx, w, lr, mu)
+            w_agg, loss = self._sharded(params, x, y, batch_idx, w, keys,
+                                        lr, mu)
         else:
-            w_agg, loss = engine_round(params, x, y, batch_idx, w, lr, mu,
-                                       self.fcfg, self.loss, self.cell_impl)
+            w_agg, loss = pipeline_round(params, x, y, batch_idx, w, keys,
+                                         lr, mu, self.fcfg, self.loss,
+                                         self.transform, self.cell_impl)
         params, state = server_opt_mod.server_update(params, w_agg, state,
-                                                     self.flcfg)
+                                                     self.flcfg.server)
         return params, state, loss
 
 
@@ -285,9 +415,14 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
     """
     provider = _as_provider(all_series, fcfg)
     holdout_rng, rng = _seed_rngs(flcfg.seed)
+    if mesh is None and flcfg.aggregation_config.kind != "flat":
+        # hierarchical aggregation implies mesh execution; build the
+        # (region, clients) grid the config asks for over all devices
+        mesh = aggregation_mod.make_mesh(flcfg.aggregation_config)
     engine = RoundEngine(fcfg, flcfg, mesh=mesh)
-    steps = partition.local_steps(provider.n_win_max, flcfg.batch_size,
-                                  flcfg.local_epochs)
+    ccfg = flcfg.client_opt
+    steps = partition.local_steps(provider.n_win_max, ccfg.batch_size,
+                                  ccfg.local_epochs)
 
     n_total = provider.n_clients
     train_ids, held_ids = partition.holdout_clients(
@@ -330,14 +465,15 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         for t in range(flcfg.rounds):
             sel = engine.select(rng, members, m, t, counts[members])
             bidx = partition.ragged_minibatch_indices(
-                rng, counts[sel], steps, flcfg.batch_size)
+                rng, counts[sel], steps, ccfg.batch_size)
             pad_idx = np.resize(np.arange(len(sel)), m_run)
             x, y, c_sel = provider.round_batch(sel[pad_idx])
             w = c_sel.copy()
             w[len(sel):] = 0.0                        # mask padding clients
             params, sstate, l = engine.step(
                 params, sstate, jnp.asarray(x), jnp.asarray(y),
-                jnp.asarray(bidx[pad_idx]), w)
+                jnp.asarray(bidx[pad_idx]), w, round_idx=t,
+                stream=cid if cid >= 0 else 0)
             hist.append(float(l))
             if log_every and (t + 1) % log_every == 0:
                 print(f"[cluster {cid}] round {t+1}/{flcfg.rounds} "

@@ -23,11 +23,13 @@ weights=None) -> np.ndarray`` of exactly ``m`` client ids from ``members``.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
 
-SAMPLING_STRATEGIES = ("uniform", "weighted", "round_robin")
+# canonical name list lives with the configs (eager facade validation);
+# re-exported here so `sampling.SAMPLING_STRATEGIES` keeps working
+from repro.configs.base import SAMPLING_STRATEGIES, SamplingConfig
 
 Sampler = Callable[..., np.ndarray]
 
@@ -86,12 +88,17 @@ _SAMPLERS = {"uniform": uniform_sampler, "weighted": weighted_sampler,
              "round_robin": round_robin_sampler}
 
 
-def make_sampler(strategy: str, seed: int = 0) -> Sampler:
-    """Resolve ``FLConfig.sampling`` to a sampler callable.
+def make_sampler(strategy: Union[str, SamplingConfig], seed: int = 0
+                 ) -> Sampler:
+    """Resolve the select stage to a sampler callable.
 
-    ``seed`` parameterizes schedule-type samplers (round_robin's fixed
-    ordering); rng-driven samplers ignore it and use the per-call ``rng``.
+    Accepts either a strategy name + ``seed`` (legacy) or a typed
+    ``SamplingConfig`` (the ``FLConfig.sampling_config`` view).  ``seed``
+    parameterizes schedule-type samplers (round_robin's fixed ordering);
+    rng-driven samplers ignore it and use the per-call ``rng``.
     """
+    if isinstance(strategy, SamplingConfig):
+        strategy, seed = strategy.strategy, strategy.seed
     if strategy not in _SAMPLERS:
         raise ValueError(f"unknown sampling strategy {strategy!r}; expected "
                          f"one of {SAMPLING_STRATEGIES}")

@@ -33,17 +33,23 @@ share one server step (and aggregation inside the round stays one ``psum``).
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FLConfig
-
-SERVER_OPTS = ("fedavg", "fedavg_weighted", "fedprox", "fedadam", "fedyogi")
+from repro.configs.base import FLConfig, ServerOptConfig
+# canonical name list lives with the configs (eager facade validation);
+# re-exported here so `server_opt.SERVER_OPTS` keeps working
+from repro.configs.base import SERVER_OPTS
 
 # opts whose aggregation weights clients by local sample count
 WEIGHTED_AGG_OPTS = ("fedavg_weighted", "fedprox", "fedadam", "fedyogi")
+
+
+def as_server_config(cfg: Union[FLConfig, ServerOptConfig]) -> ServerOptConfig:
+    """Normalize to the typed server-update stage config (facade-friendly)."""
+    return cfg.server if isinstance(cfg, FLConfig) else cfg
 
 
 class ServerState(NamedTuple):
@@ -53,8 +59,8 @@ class ServerState(NamedTuple):
     t: jnp.ndarray              # step count
 
 
-def uses_weighted_aggregation(flcfg: FLConfig) -> bool:
-    return flcfg.server_opt in WEIGHTED_AGG_OPTS
+def uses_weighted_aggregation(flcfg: Union[FLConfig, ServerOptConfig]) -> bool:
+    return as_server_config(flcfg).name in WEIGHTED_AGG_OPTS
 
 
 def init_server_state(params) -> ServerState:
@@ -66,24 +72,27 @@ def init_server_state(params) -> ServerState:
 
 @functools.partial(jax.jit, static_argnames=("flcfg",))
 def server_update(w_global, w_agg, state: ServerState,
-                  flcfg: FLConfig) -> Tuple[Any, ServerState]:
+                  flcfg: Union[FLConfig, ServerOptConfig]
+                  ) -> Tuple[Any, ServerState]:
     """Apply one server step to the pseudo-gradient ``w_global - w_agg``.
 
-    Returns ``(new_global_params, new_state)``.  Dispatch on
-    ``flcfg.server_opt`` happens at trace time (``flcfg`` is static), so each
-    rule compiles to its own minimal program.
+    Accepts the flat ``FLConfig`` facade or the typed ``ServerOptConfig``
+    stage view.  Returns ``(new_global_params, new_state)``.  Dispatch on the
+    rule name happens at trace time (the config is static), so each rule
+    compiles to its own minimal program.
     """
-    opt = flcfg.server_opt
+    cfg = as_server_config(flcfg)
+    opt = cfg.name
     if opt not in SERVER_OPTS:
         raise ValueError(f"unknown server_opt {opt!r}; expected one of "
                          f"{SERVER_OPTS}")
-    lr = flcfg.server_lr
+    lr = cfg.lr
     g = jax.tree.map(lambda w, a: w - a, w_global, w_agg)
     t = state.t + 1
 
     if opt in ("fedavg", "fedavg_weighted", "fedprox"):
-        if flcfg.server_momentum > 0.0:    # FedAvgM
-            m = jax.tree.map(lambda mm, gg: flcfg.server_momentum * mm + gg,
+        if cfg.momentum > 0.0:             # FedAvgM
+            m = jax.tree.map(lambda mm, gg: cfg.momentum * mm + gg,
                              state.m, g)
             new = jax.tree.map(lambda w, mm: w - lr * mm, w_global, m)
             return new, ServerState(m=m, v=state.v, t=t)
@@ -93,7 +102,7 @@ def server_update(w_global, w_agg, state: ServerState,
         return new, ServerState(m=state.m, v=state.v, t=t)
 
     # adaptive rules (Reddi et al. 2021, no bias correction)
-    b1, b2, eps = flcfg.server_beta1, flcfg.server_beta2, flcfg.server_eps
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
     m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, state.m, g)
     if opt == "fedadam":
         v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg,

@@ -1,0 +1,145 @@
+"""Delta-transform stage of the federated pipeline (select -> local-update ->
+**transform(deltas)** -> aggregate -> server-update).
+
+Each transform is a pure function of ONE client's update delta
+``w_i - w_global`` (a pytree) plus a per-client PRNG key, applied INSIDE the
+round body (vmapped over the client axis, before the aggregation collective) —
+so on the mesh path the deltas that cross the wire are already clipped /
+noised / quantized, exactly like a real edge deployment where the raw local
+model never leaves the device.
+
+Knob -> literature map (see PAPERS.md):
+
+``TransformConfig.clip_norm`` (C)
+    Per-client L2 clip ``delta * min(1, C / ||delta||_2)`` — the sensitivity
+    bound of DP-FedAvg, and the clip step of privacy-preserving DER
+    forecasting (arXiv:2107.03248); also tames client drift on non-IID load
+    data.  The ROADMAP "secure-agg / DP hooks" item plugs in here.
+``TransformConfig.noise_multiplier`` (z)
+    Gaussian mechanism: add ``N(0, (z*C)^2)`` per coordinate to the clipped
+    delta (C falls back to 1 when clipping is off).  With clip + noise the
+    per-round release is the standard Gaussian-mechanism privitization of
+    each client's contribution (arXiv:2107.03248 §III).
+``TransformConfig.quantize_bits`` (b)
+    Stochastic b-bit integer quantize/dequantize (per-leaf max-abs scaling,
+    unbiased stochastic rounding).  Models the int8 uplink compression that
+    lightweight FL for load forecasting uses to cut edge upload cost
+    (arXiv:2404.03320) — b=8 is a 4x wire reduction vs float32.  We simulate
+    the wire format (quantize then dequantize) so aggregation math stays in
+    float.
+
+Transforms compose as a :class:`TransformStack` in the fixed order
+clip -> noise -> quantize (sensitivity bound first, privacy second,
+compression last).  The empty stack is the identity and keeps the round
+bit-identical to the pre-transform engine (``core/fedavg.py`` routes identity
+stacks through the legacy aggregation math).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformConfig
+
+PyTree = Any
+
+
+class DeltaTransform(Protocol):
+    """One per-client delta transform: ``(delta_tree, key) -> delta_tree``.
+
+    Implementations must be hashable (frozen dataclasses) so a stack can be
+    a static jit argument, and must be vmap-safe (pure jnp + jax.random).
+    """
+
+    def __call__(self, delta: PyTree, key: jax.Array) -> PyTree: ...
+
+
+def global_l2_norm(tree: PyTree) -> jax.Array:
+    """L2 norm over ALL leaves of a pytree (one client's delta)."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class L2Clip:
+    """Scale the whole delta so its global L2 norm is at most ``clip_norm``."""
+    clip_norm: float
+
+    def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
+        norm = global_l2_norm(delta)
+        factor = jnp.minimum(1.0, self.clip_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree.map(lambda x: x * factor, delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianNoise:
+    """Add per-coordinate ``N(0, sigma^2)`` noise (Gaussian mechanism)."""
+    sigma: float
+
+    def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
+        leaves, treedef = jax.tree.flatten(delta)
+        keys = jax.random.split(key, len(leaves))
+        noised = [x + self.sigma * jax.random.normal(k, x.shape, x.dtype)
+                  for x, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, noised)
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticQuantize:
+    """Unbiased ``bits``-bit integer quantize/dequantize, per-leaf scaling.
+
+    Each leaf is scaled by ``max|x| / (2^(bits-1) - 1)`` to the signed integer
+    grid, stochastically rounded (``floor(x/s + u)``, ``u ~ U[0,1)`` — exact
+    in expectation), then dequantized.  Round-trip error is bounded by one
+    grid step ``s`` per coordinate; an all-zero leaf round-trips to zero.
+    """
+    bits: int = 8
+
+    def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
+        levels = float(2 ** (self.bits - 1) - 1)       # int8 -> 127
+        leaves, treedef = jax.tree.flatten(delta)
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for x, k in zip(leaves, keys):
+            scale = jnp.max(jnp.abs(x)) / levels
+            safe = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+            u = jax.random.uniform(k, x.shape)
+            q = jnp.clip(jnp.floor(x / safe + u), -levels, levels)
+            out.append((q * safe).astype(x.dtype))
+        return jax.tree.unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformStack:
+    """Ordered composition of delta transforms; hashable, so jit-static.
+
+    Each stage gets a decorrelated sub-key (``fold_in(key, stage_index)``) of
+    the per-client key, so noise and stochastic rounding never share bits.
+    """
+    transforms: Tuple[DeltaTransform, ...] = ()
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.transforms
+
+    def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
+        for i, t in enumerate(self.transforms):
+            delta = t(delta, jax.random.fold_in(key, i))
+        return delta
+
+
+def make_stack(cfg: TransformConfig) -> TransformStack:
+    """Build the clip -> noise -> quantize stack selected by a
+    ``TransformConfig`` (the ``FLConfig.transform`` facade view)."""
+    ts = []
+    if cfg.clip_norm > 0.0:
+        ts.append(L2Clip(cfg.clip_norm))
+    if cfg.noise_multiplier > 0.0:
+        sensitivity = cfg.clip_norm if cfg.clip_norm > 0.0 else 1.0
+        ts.append(GaussianNoise(cfg.noise_multiplier * sensitivity))
+    if cfg.quantize_bits:
+        ts.append(StochasticQuantize(cfg.quantize_bits))
+    return TransformStack(tuple(ts))

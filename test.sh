@@ -17,10 +17,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q "$@"
 
 # Default run also smokes the streaming client-window path (1 round over a
-# 1000-client population, O(m) per round) so 10k+ scaling can't silently rot.
+# 1000-client population, O(m) per round) so 10k+ scaling can't silently rot,
+# then the full pipeline: DP clip + noise + int8-quantized deltas aggregated
+# edge->region->cloud over the 2x4 (region, clients) mesh.
 if [ "$#" -eq 0 ]; then
   echo "== bench_scalability smoke (streaming provider, 1 round)"
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_scalability.py \
       --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke
+  echo "== bench_scalability smoke (DP + quantize + hierarchical, 1 round)"
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_scalability.py \
+      --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke \
+      --dp-clip 1.0 --dp-noise 0.5 --quantize 8 --hier --regions 2
 fi

@@ -1,0 +1,57 @@
+"""Tier-1 parity smoke for the fused Pallas recurrent cells on the federated
+round path (ROADMAP "Pallas client kernel", first wiring step).
+
+``local_update`` differentiates through the forecaster, and ``pallas_call``
+has no autodiff rule — ``kernels/ops.py`` closes the gap with a
+``custom_vjp`` (fused forward, reference-VJP backward), which is what these
+tests pin: one full client local-update step with ``cell_impl="pallas"``
+(interpret mode on CPU) must match the pure-jnp oracle path.  Skips cleanly
+where Pallas is unavailable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("jax.experimental.pallas",
+                    reason="Pallas not available in this jax build")
+
+from repro.configs.base import ForecasterConfig
+from repro.core import losses
+from repro.core.client import local_update
+from repro.models import forecaster
+
+LOSS = losses.make_loss("mse")
+
+
+def _data(rng, n_win=12, lookback=8, horizon=4):
+    x = jnp.asarray(rng.random((n_win, lookback, 1)), jnp.float32)
+    y = jnp.asarray(rng.random((n_win, horizon)), jnp.float32)
+    bidx = jnp.asarray(rng.integers(0, n_win, (2, 8)))
+    return x, y, bidx
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+def test_local_update_pallas_matches_jnp(cell):
+    """One ClientUpdate (2 SGD steps) through the fused cell == jnp oracle."""
+    fcfg = ForecasterConfig(cell=cell, hidden_dim=8)
+    params = forecaster.init_forecaster(jax.random.PRNGKey(0), fcfg)
+    x, y, bidx = _data(np.random.default_rng(0))
+    p_jnp, l_jnp = local_update(params, x, y, bidx, 0.05, fcfg, LOSS, "jnp")
+    p_pal, l_pal = local_update(params, x, y, bidx, 0.05, fcfg, LOSS,
+                                "pallas")
+    np.testing.assert_allclose(float(l_jnp), float(l_pal), rtol=1e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4,
+                                                         atol=1e-5),
+                 p_jnp, p_pal)
+
+
+def test_forecast_pallas_matches_jnp():
+    """Inference path parity (no grad): fused forward == jnp forward."""
+    fcfg = ForecasterConfig(cell="lstm", hidden_dim=8)
+    params = forecaster.init_forecaster(jax.random.PRNGKey(1), fcfg)
+    x, _, _ = _data(np.random.default_rng(1))
+    f_jnp = forecaster.forecast(params, x, fcfg, "jnp")
+    f_pal = forecaster.forecast(params, x, fcfg, "pallas")
+    np.testing.assert_allclose(np.asarray(f_jnp), np.asarray(f_pal),
+                               rtol=1e-5, atol=1e-6)
