@@ -6,6 +6,12 @@ we (a) run the same FL code path under a single-core CPU budget and measure
 per-round wall time, (b) compute bytes-on-wire analytically from the actual
 parameter count (download + upload per client per round), and (c) report
 peak RSS of the training process.
+
+Also reports the hierarchical PER-LEVEL link budgets (``latency.link_budget``,
+ROADMAP follow-up to PR 3's edge->region->cloud aggregation): region fan-in
+(clients/region uploads absorbed by each Pi cluster head) vs cloud ingress
+(one already-aggregated fp32 partial per region), with and without int8
+delta quantization on the client uplinks.
 """
 from __future__ import annotations
 
@@ -15,7 +21,7 @@ import time
 import numpy as np
 
 from repro.configs.base import FLConfig, ForecasterConfig
-from repro.core import fedavg
+from repro.core import fedavg, latency
 from repro.data import synthetic
 
 
@@ -45,8 +51,28 @@ def main():
     print(f"client_rss_mb,{rss_mb:.0f},450")
     print(f"final_loss,{res.loss_history[-1]:.5f},~1e-3")
     assert np.isfinite(res.loss_history).all()
+
+    # ---- hierarchical per-level link budgets (upload direction, per round)
+    print(f"\n# per-level link budgets — {n_clients} clients/round, "
+          f"{n_params} params (regions=1 is the flat edge->cloud topology)")
+    print("regions,quantize_bits,region_fanin_kb,cloud_ingress_kb,"
+          "cloud_vs_flat")
+    budgets = []
+    for r in (1, 2, 3, 5):
+        for bits in (0, 8):
+            b = latency.link_budget(n_params, n_clients, r, bits)
+            flat = b["flat_cloud_ingress_bytes"]
+            print(f"{r},{bits},{b['region_fanin_bytes']/1024:.0f},"
+                  f"{b['cloud_ingress_bytes']/1024:.0f},"
+                  f"{b['cloud_ingress_bytes']/flat:.2f}x")
+            budgets.append((r, bits, b))
+    print("# regional edge aggregation shrinks cloud ingress from m client "
+          "payloads to R fp32 partials; quantization compresses the "
+          "region fan-in links on top")
     return [("per_round_s", per_round), ("wire_kb", wire_kb),
-            ("rss_mb", rss_mb)]
+            ("rss_mb", rss_mb),
+            ("cloud_ingress_kb_r5",
+             budgets[-1][2]["cloud_ingress_bytes"] / 1024)]
 
 
 if __name__ == "__main__":

@@ -11,7 +11,11 @@ Sections:
   scaling_pipeline  client-count axis with the delta-transform stack
                (clip + DP noise + int8 quantize) and hierarchical
                edge→region→cloud aggregation: rounds/s + MAPE delta
-  edge         §5.5 (edge-cluster envelope, simulated)
+  pacing_semi_sync  semi-synchronous buffered rounds vs the sync baseline
+               under lognormal stragglers: simulated wall-clock to the
+               common target loss + held-out MAPE
+  edge         §5.5 (edge-cluster envelope, simulated + per-level link
+               budgets)
   kernels      Pallas kernels vs references
   roofline     §Roofline table from the dry-run artifacts
 """
@@ -34,6 +38,14 @@ def _scaling_pipeline():
         dp_clip=1.0, dp_noise=0.5, quantize=8, hier=True)
 
 
+def _pacing_semi_sync():
+    """Round-pacing axis: semi-sync buffered rounds (over-select 1.5x,
+    flush at m, staleness alpha 0.5) vs sync under lognormal stragglers."""
+    return bench_scalability.main(
+        clients=500, rounds=12, clients_per_round=16, days=60,
+        mode="semi_sync", stragglers="lognormal")
+
+
 SECTIONS = [
     ("kernels", bench_kernels.main),
     ("roofline", bench_roofline.main),
@@ -45,6 +57,7 @@ SECTIONS = [
     ("beta", bench_beta.main),
     ("scalability", bench_scalability.main),
     ("scaling_pipeline", _scaling_pipeline),
+    ("pacing_semi_sync", _pacing_semi_sync),
 ]
 
 

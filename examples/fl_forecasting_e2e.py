@@ -65,6 +65,27 @@ def main():
     ap.add_argument("--hier", action="store_true",
                     help="hierarchical edge->region->cloud aggregation (the "
                          "(region, clients) mesh is built automatically)")
+    ap.add_argument("--mode", default="sync", choices=("sync", "semi_sync"),
+                    help="round pacing: semi_sync buffers stragglers and "
+                         "folds them later with staleness-discounted weights")
+    ap.add_argument("--over-select", type=float, default=1.5,
+                    help="semi_sync dispatch factor: m' = ceil(f * m)")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="absolute semi_sync flush threshold (0 = use "
+                         "--buffer-frac)")
+    ap.add_argument("--buffer-frac", type=float, default=0.75,
+                    help="flush at ceil(frac * round dispatch size) — "
+                         "relative, so it adapts to uneven k-means cluster "
+                         "sizes (with full participation there is no over-"
+                         "selection headroom, so the demo sheds the slowest "
+                         "quarter instead)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="late-update weight discount (1+tau)^-alpha")
+    ap.add_argument("--stragglers", default="deterministic",
+                    choices=("deterministic", "lognormal", "heavy_tail"),
+                    help="simulated client-latency distribution")
+    ap.add_argument("--straggler-jitter", type=float, default=1.0,
+                    help="straggler spread (0 = deterministic latency)")
     args = ap.parse_args()
 
     fcfg = ForecasterConfig(cell="lstm", hidden_dim=64)
@@ -95,12 +116,28 @@ def main():
                 prox_mu=args.prox_mu, sampling=args.sampling,
                 holdout_frac=args.holdout_frac, dp_clip=args.dp_clip,
                 dp_noise=args.dp_noise, quantize_bits=args.quantize,
-                aggregation="hierarchical" if args.hier else "flat")
+                aggregation="hierarchical" if args.hier else "flat",
+                mode=args.mode, over_select=args.over_select,
+                buffer_k=args.buffer_k,
+                # an explicit --buffer-k wins; otherwise the relative
+                # threshold flushes at frac of each round's ACTUAL dispatch
+                # size, which tracks uneven k-means cluster memberships
+                buffer_frac=(0.0 if args.buffer_k or args.mode != "semi_sync"
+                             else args.buffer_frac),
+                staleness_alpha=args.staleness_alpha,
+                stragglers=args.stragglers,
+                straggler_jitter=args.straggler_jitter)
 
     pipe = ""
     if args.dp_clip or args.dp_noise or args.quantize or args.hier:
         pipe = (f", transforms clip={args.dp_clip}/noise={args.dp_noise}"
                 f"/quant={args.quantize}b, agg={base['aggregation']}")
+    if args.mode == "semi_sync":
+        thresh = (f"buffer_k={args.buffer_k}" if args.buffer_k
+                  else f"buffer_frac={args.buffer_frac}")
+        pipe += (f", semi_sync(over_select={args.over_select}, {thresh}, "
+                 f"alpha={args.staleness_alpha}, "
+                 f"stragglers={args.stragglers})")
     print(f"== clustered FL ({args.clients} clients → 4 clusters, "
           f"server_opt={args.server_opt}, sampling={args.sampling}{pipe})")
     res_c = fedavg.run_federated_training(
@@ -110,6 +147,25 @@ def main():
     res_g = fedavg.run_federated_training(
         train_data, fcfg, FLConfig(**base, n_clusters=0),
         log_every=args.rounds // 2)
+
+    # round pacing: simulated wall-clock (the edge metric) for the global
+    # model; under semi_sync, also train the sync baseline with the SAME
+    # straggler model and compare simulated time to the common target loss
+    print(f"\nsimulated wall-clock (global model): "
+          f"{res_g[-1].sim_times[-1]:.1f}s over {args.rounds} rounds "
+          f"({args.stragglers} stragglers)")
+    if args.mode == "semi_sync":
+        res_sync = fedavg.run_federated_training(
+            train_data, fcfg, FLConfig(**{**base, "mode": "sync"},
+                                       n_clusters=0))
+        target = max(res_g[-1].loss_history[-1],
+                     res_sync[-1].loss_history[-1])
+        tt = {k: fedavg.time_to_target(r, target)
+              for k, r in (("semi_sync", res_g[-1]),
+                           ("sync", res_sync[-1]))}
+        print(f"wall-clock to target loss {target:.5f}: semi_sync "
+              f"{tt['semi_sync']:.1f}s vs sync {tt['sync']:.1f}s "
+              f"({tt['sync'] / tt['semi_sync']:.2f}x)")
 
     held = synthetic.generate_buildings(
         args.state, list(range(10_000, 10_000 + args.heldout)),

@@ -249,6 +249,8 @@ SERVER_OPTS = ("fedavg", "fedavg_weighted", "fedprox", "fedadam", "fedyogi")
 SAMPLING_STRATEGIES = ("uniform", "weighted", "round_robin")
 AGGREGATORS = ("flat", "hierarchical")
 LOSSES = ("mse", "ew_mse")
+ASYNC_MODES = ("sync", "semi_sync")
+STRAGGLER_DISTRIBUTIONS = ("deterministic", "lognormal", "heavy_tail")
 
 
 def _check_choice(kind: str, value: str, valid: Tuple[str, ...]) -> None:
@@ -333,6 +335,88 @@ class AggregationConfig:
 
 
 @dataclass(frozen=True)
+class LatencyConfig:
+    """Simulated per-client round-trip time model (``core/latency.py``).
+
+    A selected client's time-to-server is
+
+        mult * (compute_s_per_window_epoch * n_windows * E
+                + payload_bytes / uplink_bytes_per_s)
+
+    — compute proportional to its local work (windows x epochs, the paper's
+    Pi-4B regime where training dominates), uplink proportional to the
+    post-quantize payload size.  ``mult`` is the pluggable straggler draw:
+    ``deterministic`` is always 1 (zero jitter), ``lognormal`` is
+    ``exp(jitter * N(0, 1))``, ``heavy_tail`` is ``1 + jitter * Pareto(1.5)``
+    (rare but extreme stalls).  ``jitter=0`` makes every distribution
+    deterministic.  Draws are a pure function of (seed, round, slot), so a
+    simulated schedule replays exactly.
+    """
+    distribution: str = "deterministic"  # deterministic | lognormal | heavy_tail
+    compute_s_per_window_epoch: float = 2e-3   # local SGD cost per window*epoch
+    uplink_bytes_per_s: float = 1e6            # edge uplink bandwidth
+    jitter: float = 0.5                        # straggler spread (0 = none)
+
+    def __post_init__(self):
+        _check_choice("straggler distribution", self.distribution,
+                      STRAGGLER_DISTRIBUTIONS)
+        if self.compute_s_per_window_epoch <= 0:
+            raise ValueError("compute_s_per_window_epoch must be > 0, got "
+                             f"{self.compute_s_per_window_epoch}")
+        if self.uplink_bytes_per_s <= 0:
+            raise ValueError("uplink_bytes_per_s must be > 0, got "
+                             f"{self.uplink_bytes_per_s}")
+        if self.jitter < 0:
+            raise ValueError(f"jitter must be >= 0, got {self.jitter}")
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Round-pacing stage: synchronous vs semi-synchronous buffered rounds
+    (``core/async_engine.py``).
+
+    ``sync`` is the paper's Alg. 1 — the server waits for every selected
+    client, so the slowest straggler gates the round.  ``semi_sync``
+    over-selects ``m' = ceil(over_select * m)`` clients, flushes the
+    aggregate as soon as the first ``buffer_k`` pending updates arrive
+    (simulated event clock, :class:`LatencyConfig`), and folds late arrivals
+    into later rounds with staleness-discounted weights
+    ``w_i * (1 + tau_i)^(-staleness_alpha)`` (tau = rounds late).
+
+    The flush threshold is either ABSOLUTE (``buffer_k``) or RELATIVE
+    (``buffer_frac``: ``ceil(frac * this round's dispatch size)``, resolved
+    per round).  Prefer the fraction when round sizes vary — per-cluster
+    memberships or holdouts shrink the in-flight set, and an absolute
+    ``buffer_k`` at or above it silently waits for every straggler.  With
+    both at 0 the server waits for all dispatched (bit-identical to sync
+    under zero-jitter latency); setting both raises.
+    """
+    mode: str = "sync"                 # sync | semi_sync
+    over_select: float = 1.0           # m' = ceil(over_select * m) >= m
+    buffer_k: int = 0                  # absolute flush threshold (0 = off)
+    buffer_frac: float = 0.0           # relative threshold (0 = off)
+    staleness_alpha: float = 0.5       # weight discount exponent (0 = none)
+    latency: LatencyConfig = field(default_factory=LatencyConfig)
+
+    def __post_init__(self):
+        _check_choice("async mode", self.mode, ASYNC_MODES)
+        if self.over_select < 1.0:
+            raise ValueError("over_select must be >= 1 (m' >= m), got "
+                             f"{self.over_select}")
+        if self.buffer_k < 0:
+            raise ValueError(f"buffer_k must be >= 0, got {self.buffer_k}")
+        if not 0.0 <= self.buffer_frac <= 1.0:
+            raise ValueError("buffer_frac must be in [0, 1], got "
+                             f"{self.buffer_frac}")
+        if self.buffer_k and self.buffer_frac:
+            raise ValueError("set buffer_k OR buffer_frac, not both "
+                             f"(got {self.buffer_k} and {self.buffer_frac})")
+        if self.staleness_alpha < 0:
+            raise ValueError("staleness_alpha must be >= 0, got "
+                             f"{self.staleness_alpha}")
+
+
+@dataclass(frozen=True)
 class ServerOptConfig:
     """Server-update stage: optimizer on the pseudo-gradient
     ``w_global - w_agg`` (``core/server_opt.py``)."""
@@ -394,12 +478,22 @@ class FLConfig:
     # ------------------------------------------------- aggregation stage
     aggregation: str = "flat"          # flat | hierarchical
     n_regions: int = 0                 # hierarchical: # of regions (0 = auto)
+    # ------------------------------------------------- round-pacing stage
+    mode: str = "sync"                 # sync | semi_sync
+    over_select: float = 1.0           # semi_sync: m' = ceil(over_select * m)
+    buffer_k: int = 0                  # absolute flush threshold (0 = off)
+    buffer_frac: float = 0.0           # relative flush threshold (0 = off;
+    #                                  # both 0 = wait for all dispatched)
+    staleness_alpha: float = 0.5       # late-update weight discount exponent
+    stragglers: str = "deterministic"  # latency distribution (see LatencyConfig)
+    straggler_jitter: float = 0.5      # straggler spread (ignored when
+    #                                  # stragglers="deterministic")
 
     def __post_init__(self):
         # materializing every typed stage view runs that stage's own
         # validation -> bad names/knobs fail here, at construction
         _ = (self.sampling_config, self.client_opt, self.transform,
-             self.aggregation_config, self.server)
+             self.aggregation_config, self.server, self.async_config)
 
     # ------------------------------------------------- typed stage views
     @property
@@ -422,6 +516,16 @@ class FLConfig:
     def aggregation_config(self) -> AggregationConfig:
         return AggregationConfig(kind=self.aggregation,
                                  n_regions=self.n_regions)
+
+    @property
+    def async_config(self) -> AsyncConfig:
+        return AsyncConfig(mode=self.mode, over_select=self.over_select,
+                           buffer_k=self.buffer_k,
+                           buffer_frac=self.buffer_frac,
+                           staleness_alpha=self.staleness_alpha,
+                           latency=LatencyConfig(
+                               distribution=self.stragglers,
+                               jitter=self.straggler_jitter))
 
     @property
     def server(self) -> ServerOptConfig:

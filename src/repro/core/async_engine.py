@@ -1,0 +1,253 @@
+"""Semi-synchronous buffered rounds (``AsyncConfig``, ``FLConfig.mode``).
+
+Synchronous FedAvg waits for every selected client, so the slowest straggler
+gates each round — on the paper's Pi cluster that is the wall-clock
+bottleneck.  The semi-sync engine (FedBuff-style, Nguyen et al. 2022; see
+PAPERS.md) instead:
+
+1. **over-selects** ``m' = ceil(over_select * m)`` clients per round and
+   dispatches them at the current simulated clock (``core/latency.py``
+   assigns each a finish time: compute ∝ windows x epochs, uplink ∝
+   post-quantize payload, pluggable straggler multiplier);
+2. **flushes** the aggregate as soon as the first ``buffer_k`` pending
+   updates arrive — the event clock advances to the buffer_k-th finish
+   time, never to the straggler's;
+3. **folds late arrivals** into whichever later round they land in, with
+   staleness-discounted weights ``w_i * (1 + tau_i)^(-alpha)`` (tau =
+   rounds late).  A stale delta was computed against the *dispatch-round*
+   params, so the buffer stores deltas — already run through the per-client
+   transform stack AT DISPATCH with the dispatch-round PRNG key, exactly
+   like the sync round body, so the server's straggler buffer never holds
+   raw fp32 updates — and the fold is
+   ``w <- w + sum(w_tilde_i * delta_i) / sum(w_tilde_i)``, the pipeline's
+   own ``_weighted_sums`` weighting fed staleness-discounted weights.
+
+When a flush contains exactly this round's dispatch set and nothing is
+buffered — always true for ``buffer_k = m'`` with zero-jitter latency —
+the step routes through the engine's fused synchronous round, so that
+configuration is **bit-identical** to ``mode="sync"`` on both the vmap and
+shard_map execution paths (pinned by test).  The buffer itself lives at the
+cloud server, so hierarchical topologies only affect the (unchanged)
+client-update stage layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (AggregationConfig, AsyncConfig,
+                                ForecasterConfig, TransformConfig)
+from repro.core import aggregation as aggregation_mod
+from repro.core import server_opt as server_opt_mod
+from repro.core import transforms as transforms_mod
+from repro.core.client import local_update
+from repro.sharding import shard_map
+
+PyTree = Any
+
+
+def staleness_discount(tau, alpha: float):
+    """Weight multiplier for an update arriving ``tau`` rounds late:
+    ``(1 + tau)^(-alpha)``.  Monotone non-increasing in tau; ``alpha = 0``
+    disables the discount; a fresh update (tau = 0) is never discounted."""
+    return (1.0 + np.asarray(tau, np.float64)) ** (-float(alpha))
+
+
+# ------------------------------------------------------------ client stage
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "loss", "tcfg", "cell_impl"))
+def client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
+                  cfg: ForecasterConfig, loss: Callable,
+                  tcfg: TransformConfig = TransformConfig(),
+                  cell_impl: str = "jnp"):
+    """Local-update + transform stages alone: per-client TRANSFORMED deltas
+    ``stack(w_i - w_global)`` + losses, WITHOUT aggregation — the buffered
+    server needs each client's contribution individually so it can release
+    them on its own clock.  The transform stack runs here, at dispatch, for
+    the same reason it runs inside the sync round body: only privatized /
+    compressed deltas ever leave the client (the server's straggler buffer
+    must not hold raw fp32 updates), and the simulated uplink charges the
+    post-quantize payload.  ``keys``: (M, 2) dispatch-round transform keys.
+    """
+    locals_, client_loss = jax.vmap(
+        local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
+        params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
+    deltas = jax.tree.map(lambda l, g: l - g, locals_, params)
+    stack = transforms_mod.make_stack(tcfg)
+    if not stack.is_identity:
+        deltas = jax.vmap(stack)(deltas, keys)
+    return deltas, client_loss
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_client_deltas(mesh, cfg: ForecasterConfig, loss: Callable,
+                               tcfg: TransformConfig = TransformConfig(),
+                               acfg: AggregationConfig = AggregationConfig(),
+                               cell_impl: str = "jnp"):
+    """Mesh-sharded client stage: same layout as the fused pipeline round
+    (clients over the 1-D axis, or the 2-D (region, clients) grid), but the
+    per-client transformed deltas come back stacked instead of reduced —
+    the transform stack still runs INSIDE the shard_map body, so only
+    privatized/compressed deltas cross shard boundaries."""
+    agg = aggregation_mod.make_aggregator(acfg, mesh)
+    pspec = agg.pspec()
+
+    def body(params, x, y, batch_idx, keys, lr, prox_mu):
+        return client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
+                             cfg, loss, tcfg, cell_impl)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), pspec, pspec, pspec, pspec, P(), P()),
+        out_specs=(pspec, pspec),
+        check_vma=False))
+
+
+# --------------------------------------------------------- buffered server
+@jax.jit
+def buffered_aggregate(params, deltas, weights):
+    """Fold a flushed buffer of (already-transformed) client deltas into the
+    global model: ``w + sum(w_i * delta_i) / sum(w_i)``.
+
+    deltas: client-stacked pytree (leading axis = arrivals, zero-padded);
+    weights: (A,) staleness-discounted aggregation weights (0 marks pads,
+    which then contribute nothing to either sum).  The weighting math is
+    the pipeline's own ``_weighted_sums``.
+    """
+    from repro.core import fedavg as fedavg_mod
+    sums, wsum = fedavg_mod._weighted_sums(deltas, weights)
+    return jax.tree.map(lambda g, s: g + s / wsum, params, sums)
+
+
+@dataclasses.dataclass
+class PendingUpdate:
+    """One dispatched-but-not-yet-aggregated client update (host-side).
+    ``delta`` is already transformed (clipped/noised/quantized at dispatch
+    with the dispatch-round key) — the buffer never holds raw updates."""
+    delta: PyTree                      # np arrays, computed at dispatch
+    weight: float                      # base aggregation weight (pre-discount)
+    loss: float                        # client's local training loss
+    dispatch_round: int
+    finish_time: float                 # simulated arrival (absolute seconds)
+
+
+def _tree_slice(tree, i: int):
+    return jax.tree.map(lambda a: np.asarray(a[i]), tree)
+
+
+def _stack_padded(pending: List[PendingUpdate], weights: np.ndarray):
+    """Stack arrived updates into fixed-capacity (next-pow-2) batches so the
+    jitted fold sees a bounded set of shapes (<= log2 traces)."""
+    n = len(pending)
+    cap = 1 << max(n - 1, 0).bit_length()
+    deltas = jax.tree.map(
+        lambda *xs: np.stack(xs + (np.zeros_like(xs[0]),) * (cap - n)),
+        *[p.delta for p in pending])
+    w = np.zeros(cap, np.float32)
+    w[:n] = weights
+    return deltas, w
+
+
+class SemiSyncState:
+    """The buffered server's host-side event state: pending updates + the
+    simulated clock.  One per :class:`~repro.core.fedavg.RoundEngine`;
+    reset between independent trainings (per cluster)."""
+
+    def __init__(self) -> None:
+        self.pending: List[PendingUpdate] = []
+        self.clock = 0.0
+        self.late_folds = 0            # stale updates folded so far
+        self.max_staleness = 0         # largest tau seen
+
+    def reset(self) -> None:
+        self.__init__()
+
+
+def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
+                   round_idx: int = 0, stream: int = 0):
+    """One semi-synchronous round (``RoundEngine.step`` dispatches here).
+
+    Same contract as the sync step — already-selected (over-selected) client
+    data in, ``(params, server_state, loss)`` out — plus the simulated event
+    clock advanced on ``engine.async_state``.  The reported loss is the
+    discount-weighted mean local loss of the updates actually folded this
+    round.
+    """
+    ss: SemiSyncState = engine.async_state
+    acfg: AsyncConfig = engine.async_cfg
+    ccfg = engine.flcfg.client_opt
+    w_in = np.asarray(weights, np.float32)
+    real = np.flatnonzero(w_in > 0)    # mesh-padding duplicates excluded
+
+    # -- dispatch: assign every real client a simulated finish time
+    times = engine.latency.times(round_idx, w_in[real], ccfg.local_epochs)
+    finish = ss.clock + times
+
+    # -- flush point: clock advances to the k-th earliest arrival among
+    # everything in flight (old stragglers + this round's dispatch); a
+    # fractional threshold resolves against THIS round's dispatch size, so
+    # it adapts to uneven cluster/holdout memberships
+    pend_finish = np.asarray([p.finish_time for p in ss.pending] +
+                             list(finish))
+    if acfg.buffer_frac:
+        k_cfg = max(1, int(np.ceil(acfg.buffer_frac * len(finish))))
+    else:
+        k_cfg = engine.buffer_k
+    k = min(k_cfg, len(pend_finish))
+    new_clock = float(np.partition(pend_finish, k - 1)[k - 1])
+    arrive_now = finish <= new_clock
+
+    if not ss.pending and bool(arrive_now.all()):
+        # Complete flush of exactly this round's dispatch set, nothing
+        # buffered: identical math to a synchronous round (all tau = 0),
+        # so route through the fused sync path — this is what makes
+        # semi_sync(buffer_k=m', zero jitter) bit-identical to sync.
+        ss.clock = new_clock
+        return engine._sync_step(params, state, x, y, batch_idx, weights,
+                                 round_idx, stream)
+
+    # -- slow path: compute every dispatched client's (transformed) delta
+    # now — the simulation reveals them per the event clock — buffer, fold
+    lr = jnp.float32(engine.flcfg.lr)
+    mu = jnp.float32(engine.prox_mu)
+    keys = engine.round_keys(round_idx, x.shape[0], stream)
+    if engine._client_fn is not None:
+        deltas, closs = engine._client_fn(params, x, y, batch_idx, keys,
+                                          lr, mu)
+    else:
+        deltas, closs = client_deltas(params, x, y, batch_idx, keys, lr, mu,
+                                      engine.fcfg, engine.loss,
+                                      engine.transform, engine.cell_impl)
+    deltas = jax.device_get(deltas)
+    closs = np.asarray(closs)
+    base_w = w_in if engine.weighted else (w_in > 0).astype(np.float32)
+    for j, i in enumerate(real):
+        ss.pending.append(PendingUpdate(
+            delta=_tree_slice(deltas, int(i)), weight=float(base_w[i]),
+            loss=float(closs[i]), dispatch_round=round_idx,
+            finish_time=float(finish[j])))
+
+    arrived = [p for p in ss.pending if p.finish_time <= new_clock]
+    ss.pending = [p for p in ss.pending if p.finish_time > new_clock]
+    ss.clock = new_clock
+
+    tau = np.asarray([round_idx - p.dispatch_round for p in arrived])
+    ss.late_folds += int((tau > 0).sum())
+    ss.max_staleness = max(ss.max_staleness, int(tau.max(initial=0)))
+    eff_w = (np.asarray([p.weight for p in arrived])
+             * staleness_discount(tau, acfg.staleness_alpha)
+             ).astype(np.float32)
+    d_stack, w_stack = _stack_padded(arrived, eff_w)
+    w_agg = buffered_aggregate(params, jax.tree.map(jnp.asarray, d_stack),
+                               jnp.asarray(w_stack))
+    losses = np.asarray([p.loss for p in arrived])
+    loss = float(np.sum(eff_w * losses) / eff_w.sum())
+    params, state = server_opt_mod.server_update(params, w_agg, state,
+                                                 engine.flcfg.server)
+    return params, state, jnp.asarray(loss)

@@ -36,6 +36,14 @@ Engine selection is driven entirely by the ``FLConfig`` facade::
 whose typed stage views (``.sampling_config``, ``.client_opt``,
 ``.transform``, ``.aggregation_config``, ``.server``) are validated eagerly
 at construction.
+
+Round PACING is orthogonal to the stage pipeline: ``FLConfig.mode`` selects
+synchronous rounds (default — the slowest selected client gates the round on
+the simulated event clock, ``core/latency.py``) or semi-synchronous buffered
+rounds (``core/async_engine.py`` — over-select, flush at the ``buffer_k``-th
+arrival, fold stragglers later with staleness-discounted weights).
+``RoundEngine.step`` dispatches on the mode; ``FLResult.sim_times`` reports
+the simulated wall clock either way.
 """
 from __future__ import annotations
 
@@ -312,6 +320,53 @@ class RoundEngine:
             self._sharded = make_pipeline_round(
                 mesh, fcfg, self.loss, self.transform,
                 flcfg.aggregation_config, cell_impl=cell_impl)
+        # ---- round pacing (sync vs semi-sync buffered) -------------------
+        # the latency model is host-side only: under mode="sync" it just
+        # tracks a simulated wall clock and never touches the round math
+        from repro.core import async_engine, latency as latency_mod
+        self.async_cfg = flcfg.async_config
+        self.latency = latency_mod.LatencyModel(
+            self.async_cfg.latency, flcfg.seed,
+            latency_mod.payload_bytes(fcfg.num_params(),
+                                      flcfg.quantize_bits))
+        self.async_state = async_engine.SemiSyncState()
+        self._client_fn = None
+        if self.async_cfg.mode == "semi_sync":
+            m_prime = self.dispatch_m(flcfg.clients_per_round)
+            # buffer_frac resolves per round in semi_sync_step; buffer_k is
+            # absolute (0 = wait for all dispatched)
+            self.buffer_k = self.async_cfg.buffer_k or m_prime
+            if self.async_cfg.buffer_k > m_prime:
+                raise ValueError(
+                    f"buffer_k={self.buffer_k} exceeds the dispatch size "
+                    f"m'={m_prime} (= ceil(over_select * clients_per_round))"
+                    " — the flush could never trigger; use buffer_frac for "
+                    "a threshold relative to the actual round size")
+            if mesh is not None:
+                self._client_fn = async_engine.make_sharded_client_deltas(
+                    mesh, fcfg, self.loss, flcfg.transform,
+                    flcfg.aggregation_config, cell_impl=cell_impl)
+        else:
+            self.buffer_k = 0
+
+    def dispatch_m(self, m: int, n_members: Optional[int] = None) -> int:
+        """Per-round dispatch size: ``m`` under sync, the over-selected
+        ``m' = ceil(over_select * m)`` (capped at the membership) under
+        semi-sync."""
+        if self.async_cfg.mode != "semi_sync":
+            return m
+        m_prime = int(np.ceil(self.async_cfg.over_select * m))
+        return m_prime if n_members is None else min(m_prime, n_members)
+
+    @property
+    def sim_time(self) -> float:
+        """Simulated wall-clock seconds consumed so far (event clock)."""
+        return self.async_state.clock
+
+    def reset_pacing(self) -> None:
+        """Drop buffered stragglers + rewind the simulated clock (call
+        between independent trainings, e.g. per cluster)."""
+        self.async_state.reset()
 
     def init(self, key):
         """Fresh global params + server-optimizer state."""
@@ -347,7 +402,32 @@ class RoundEngine:
         uniform and weighted paths.  ``round_idx`` / ``stream`` seed the
         per-client transform keys (only consumed when a transform stack is
         configured).  Returns ``(new params, new server state, round loss)``.
+
+        Dispatches on ``FLConfig.mode``: ``sync`` (default) waits for every
+        client — the round's simulated cost is the slowest client's latency;
+        ``semi_sync`` routes through the staleness-weighted buffered server
+        (``core/async_engine.py``), where M is the over-selected ``m'``.
         """
+        if self.async_cfg.mode == "semi_sync":
+            from repro.core import async_engine
+            return async_engine.semi_sync_step(
+                self, params, state, x, y, batch_idx, weights, round_idx,
+                stream)
+        # sync: the straggler gates the round — advance the simulated clock
+        # by the max client latency (host-side; the round math is untouched)
+        w_np = np.asarray(weights, np.float32)
+        real = np.flatnonzero(w_np > 0)
+        times = self.latency.times(round_idx, w_np[real],
+                                   self.flcfg.client_opt.local_epochs)
+        self.async_state.clock += float(times.max(initial=0.0))
+        return self._sync_step(params, state, x, y, batch_idx, weights,
+                               round_idx, stream)
+
+    def _sync_step(self, params, state, x, y, batch_idx, weights,
+                   round_idx: int = 0, stream: int = 0):
+        """The synchronous fused round (select-free part of paper Alg. 1);
+        also the semi-sync fast path when a flush is a complete, fresh
+        dispatch set (identical math — all staleness tau = 0)."""
         w = jnp.asarray(weights, jnp.float32)
         if not self.weighted:             # uniform aggregation (pads stay 0)
             w = (w > 0).astype(jnp.float32)
@@ -374,6 +454,16 @@ class FLResult:
     cluster_centroids: Optional[np.ndarray] = None
     cluster_assignments: Optional[np.ndarray] = None  # (N,); -1 = held out
     heldout_clients: Optional[np.ndarray] = None
+    sim_times: Optional[np.ndarray] = None  # (T,) simulated seconds at each
+    #                                       # round's end (latency model)
+
+
+def time_to_target(res: FLResult, target: float) -> float:
+    """Simulated seconds until ``res.loss_history`` first reaches ``target``
+    — the wall-clock-to-accuracy readout for comparing round-pacing modes.
+    Returns ``nan`` when the run never got there (e.g. diverged)."""
+    hit = np.flatnonzero(res.loss_history <= target)
+    return float(res.sim_times[hit[0]]) if len(hit) else float("nan")
 
 
 def _seed_rngs(seed: int):
@@ -456,14 +546,26 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
     for cid, members in groups.items():
         key = jax.random.PRNGKey(flcfg.seed + (cid if cid >= 0 else 0))
         params, sstate = engine.init(key)
-        hist = []
+        engine.reset_pacing()          # per-cluster event clock + buffer
+        hist, sim_hist = [], []
         m = min(flcfg.clients_per_round, len(members))
+        # semi-sync over-selects m' >= m; sync dispatches exactly m
+        m_sel = engine.dispatch_m(m, len(members))
+        if (engine.async_cfg.mode == "semi_sync"
+                and engine.async_cfg.buffer_k >= m_sel > 0
+                and engine.async_cfg.buffer_k):
+            # an absolute threshold the round can never fill waits for the
+            # slowest straggler — legal, but the user should know
+            print(f"[cluster {cid}] semi_sync: buffer_k="
+                  f"{engine.async_cfg.buffer_k} >= dispatch size {m_sel} — "
+                  "every flush waits for all (sync pacing); use buffer_frac "
+                  "for a round-size-relative threshold")
         # mesh divisibility: round UP and pad the selection (never train
         # fewer clients than configured); pads are cycled duplicates that
         # enter the round with weight 0, so the math is unchanged
-        m_run = -(-m // n_dev) * n_dev
+        m_run = -(-m_sel // n_dev) * n_dev
         for t in range(flcfg.rounds):
-            sel = engine.select(rng, members, m, t, counts[members])
+            sel = engine.select(rng, members, m_sel, t, counts[members])
             bidx = partition.ragged_minibatch_indices(
                 rng, counts[sel], steps, ccfg.batch_size)
             pad_idx = np.resize(np.arange(len(sel)), m_run)
@@ -475,12 +577,14 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
                 jnp.asarray(bidx[pad_idx]), w, round_idx=t,
                 stream=cid if cid >= 0 else 0)
             hist.append(float(l))
+            sim_hist.append(engine.sim_time)
             if log_every and (t + 1) % log_every == 0:
                 print(f"[cluster {cid}] round {t+1}/{flcfg.rounds} "
-                      f"loss {hist[-1]:.5f}")
+                      f"loss {hist[-1]:.5f} sim_t {sim_hist[-1]:.1f}s")
         results[cid] = FLResult(jax.device_get(params), np.array(hist),
                                 cents, assigns,
-                                held_ids if len(held_ids) else None)
+                                held_ids if len(held_ids) else None,
+                                sim_times=np.array(sim_hist))
     return results
 
 

@@ -1,0 +1,104 @@
+"""Simulated client-latency model for semi-synchronous rounds
+(``LatencyConfig``; consumed by ``core/async_engine.py``).
+
+The paper's deployment trains on a Raspberry-Pi edge cluster where a round
+is gated by its slowest client (70-100 s/round on Pi 4Bs, §5.5).  Edge-FL
+work on load forecasting (arXiv:2201.11248) and lightweight FL
+(arXiv:2404.03320) both argue that *wall-clock*-to-accuracy — not
+rounds-to-accuracy — is the metric that matters there, so the engine drives
+a simulated event clock from a per-client latency model:
+
+    t_i = mult_i * (compute_s_per_window_epoch * n_windows_i * E
+                    + payload_bytes / uplink_bytes_per_s)
+
+Compute scales with the client's local work (windows x epochs — ragged
+histories make slow clients for free), uplink with the post-quantize
+payload size (``payload_bytes``), and ``mult_i`` is the pluggable straggler
+draw (deterministic / lognormal / heavy-tail).  Draws are a pure function
+of ``(seed, round, slot)`` — no shared rng state — so a simulated schedule
+replays bit-exactly under a fixed seed.
+
+``link_budget`` models the hierarchical per-level wire cost (region fan-in
+vs cloud ingress) for ``bench_edge`` — the ROADMAP follow-up to PR 3's
+edge->region->cloud aggregation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import (STRAGGLER_DISTRIBUTIONS,  # noqa: F401 (re-export)
+                                LatencyConfig)
+
+# domain-separation tag for the latency rng stream: decorrelates latency
+# draws from every other consumer of FLConfig.seed (sampler, holdout, keys)
+_LATENCY_STREAM = 0x1A7E
+
+
+def payload_bytes(n_params: int, quantize_bits: int = 0) -> float:
+    """Uplink payload of one client update: fp32, or ``quantize_bits``-bit
+    ints when the quantize transform is on (per-leaf scale overhead is a few
+    floats on a ~140k-param model — ignored)."""
+    if quantize_bits:
+        return math.ceil(n_params * quantize_bits / 8)
+    return n_params * 4.0
+
+
+class LatencyModel:
+    """Per-round client finish-time sampler (all host-side numpy)."""
+
+    def __init__(self, cfg: LatencyConfig, seed: int,
+                 payload: float) -> None:
+        self.cfg = cfg
+        self.seed = int(seed)
+        self.uplink_s = float(payload) / cfg.uplink_bytes_per_s
+
+    def _multipliers(self, round_idx: int, n: int) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.distribution == "deterministic" or cfg.jitter == 0.0:
+            return np.ones(n)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([_LATENCY_STREAM, self.seed,
+                                    int(round_idx)]))
+        if cfg.distribution == "lognormal":
+            return np.exp(cfg.jitter * rng.standard_normal(n))
+        # heavy_tail: occasional extreme stalls (Pareto shape 1.5 has
+        # infinite variance — exactly the regime where waiting for the max
+        # is catastrophic but the k-th order statistic is tame)
+        return 1.0 + cfg.jitter * rng.pareto(1.5, size=n)
+
+    def times(self, round_idx: int, n_windows: np.ndarray,
+              epochs: int) -> np.ndarray:
+        """Simulated seconds from dispatch to server arrival, one per slot.
+
+        ``n_windows``: per-client local window counts (the same per-client
+        sample counts that drive weighted aggregation).
+        """
+        n_windows = np.asarray(n_windows, np.float64)
+        base = (self.cfg.compute_s_per_window_epoch * n_windows * epochs
+                + self.uplink_s)
+        return base * self._multipliers(round_idx, len(n_windows))
+
+
+def link_budget(n_params: int, m_clients: int, n_regions: int,
+                quantize_bits: int = 0) -> Dict[str, float]:
+    """Per-level wire cost of one round's uploads, in bytes.
+
+    ``flat``: all m client payloads land on the cloud link.  Hierarchical:
+    each region's edge aggregator absorbs ~m/R client uploads (the regional
+    fan-in) and forwards ONE fp32 partial upstream, so cloud ingress drops
+    from m payloads to R — client quantization compresses the fan-in links,
+    the region->cloud partials are already-aggregated floats.
+    """
+    if n_regions < 1:
+        raise ValueError(f"n_regions must be >= 1, got {n_regions}")
+    up = payload_bytes(n_params, quantize_bits)
+    region_fanin = math.ceil(m_clients / n_regions) * up
+    flat_ingress = m_clients * up
+    cloud_ingress = (flat_ingress if n_regions == 1
+                     else n_regions * payload_bytes(n_params, 0))
+    return {"region_fanin_bytes": float(region_fanin),
+            "cloud_ingress_bytes": float(cloud_ingress),
+            "flat_cloud_ingress_bytes": float(flat_ingress)}

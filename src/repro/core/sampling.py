@@ -5,9 +5,11 @@ Under non-IID load data the selection scheme measurably shifts accuracy
 (Briggs et al. 2021; Taik & Cherkaoui 2020), so it is pluggable:
 
 ``uniform``
-    Paper Alg. 1: ``m`` distinct members uniformly at random (padded by
-    resampling with replacement only when the mesh forces a larger ``m``
-    than the cluster has members).
+    Paper Alg. 1: up to ``min(m, |members|)`` distinct members uniformly at
+    random; when ``m`` exceeds the membership (e.g. mesh-forced round
+    sizes), the remainder is filled with evenly-cycled duplicates — fresh
+    shuffled passes over the membership, never a member k+2 times before
+    every member appears k+1 times.
 ``weighted``
     Without-replacement sampling with probability proportional to a per-client
     weight vector (typically local sample counts) — biases rounds toward
@@ -35,11 +37,41 @@ Sampler = Callable[..., np.ndarray]
 
 
 def _pad(rng: np.random.Generator, sel: np.ndarray, members: np.ndarray,
-         m: int) -> np.ndarray:
-    """Pad a selection up to m (with replacement) when the cluster is small."""
+         m: int, weights: Optional[np.ndarray] = None) -> np.ndarray:
+    """Pad a selection up to exactly m, preferring DISTINCT unselected members.
+
+    Pool priority: (1) unselected members with nonzero weight (drawn without
+    replacement, probability proportional to weight), (2) remaining
+    unselected members (uniform, without replacement), (3) only once every
+    member is already selected, evenly-cycled duplicate passes — fresh
+    shuffles of the full membership — so no member appears k+2 times before
+    every member appears k+1 times.  The old pad drew uniformly WITH
+    replacement from ALL members, which could hand a weighted round to
+    zero-weight clients and duplicate already-selected clients while
+    distinct unselected members remained.
+    """
     if len(sel) >= m:
         return sel[:m]
-    return np.concatenate([sel, rng.choice(members, m - len(sel))])
+    out, need = [sel], m - len(sel)
+    unsel = ~np.isin(members, sel)
+    if weights is None:
+        pools = [(unsel, None)]
+    else:
+        w = np.asarray(weights, np.float64)
+        pools = [(unsel & (w > 0), w), (unsel & (w <= 0), None)]
+    for mask, pw in pools:
+        pool = members[mask]
+        if need == 0 or len(pool) == 0:
+            continue
+        k = min(need, len(pool))
+        p = None if pw is None else pw[mask] / pw[mask].sum()
+        out.append(rng.choice(pool, size=k, replace=False, p=p))
+        need -= k
+    while need > 0:                    # everyone selected: cycle duplicates
+        k = min(need, len(members))
+        out.append(rng.permutation(members)[:k])
+        need -= k
+    return np.concatenate(out)
 
 
 def uniform_sampler(rng: np.random.Generator, members: np.ndarray, m: int,
@@ -59,11 +91,12 @@ def weighted_sampler(rng: np.random.Generator, members: np.ndarray, m: int,
     if nonzero == 0 or w.sum() <= 0:
         return uniform_sampler(rng, members, m, round_idx)
     # without-replacement draw can yield at most `nonzero` distinct clients;
-    # any remainder is padded uniformly so the contract (exactly m) holds
-    # even when some clients carry zero weight (e.g. no local windows)
+    # the remainder pads from unselected members (nonzero-weight first) so
+    # the exactly-m contract holds even when some clients carry zero weight
+    # (e.g. no local windows)
     k = min(m, len(members), nonzero)
     sel = rng.choice(members, size=k, replace=False, p=w / w.sum())
-    return _pad(rng, sel, members, m)
+    return _pad(rng, sel, members, m, weights=w)
 
 
 def round_robin_sampler(rng: np.random.Generator, members: np.ndarray, m: int,

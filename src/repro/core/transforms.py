@@ -37,7 +37,7 @@ stacks through the legacy aggregation math).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Protocol, Tuple
+from typing import Any, ClassVar, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,11 @@ class DeltaTransform(Protocol):
 
     Implementations must be hashable (frozen dataclasses) so a stack can be
     a static jit argument, and must be vmap-safe (pure jnp + jax.random).
+    ``tag`` is the transform's STABLE key-derivation id (see
+    :class:`TransformStack`): unique per transform kind, never reused.
     """
+
+    tag: ClassVar[int]
 
     def __call__(self, delta: PyTree, key: jax.Array) -> PyTree: ...
 
@@ -67,6 +71,7 @@ def global_l2_norm(tree: PyTree) -> jax.Array:
 class L2Clip:
     """Scale the whole delta so its global L2 norm is at most ``clip_norm``."""
     clip_norm: float
+    tag: ClassVar[int] = 0             # stable PRNG stream id (no randomness)
 
     def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
         norm = global_l2_norm(delta)
@@ -78,6 +83,7 @@ class L2Clip:
 class GaussianNoise:
     """Add per-coordinate ``N(0, sigma^2)`` noise (Gaussian mechanism)."""
     sigma: float
+    tag: ClassVar[int] = 1             # stable PRNG stream id
 
     def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
         leaves, treedef = jax.tree.flatten(delta)
@@ -97,6 +103,7 @@ class StochasticQuantize:
     grid step ``s`` per coordinate; an all-zero leaf round-trips to zero.
     """
     bits: int = 8
+    tag: ClassVar[int] = 2             # stable PRNG stream id
 
     def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
         levels = float(2 ** (self.bits - 1) - 1)       # int8 -> 127
@@ -116,8 +123,12 @@ class StochasticQuantize:
 class TransformStack:
     """Ordered composition of delta transforms; hashable, so jit-static.
 
-    Each stage gets a decorrelated sub-key (``fold_in(key, stage_index)``) of
-    the per-client key, so noise and stochastic rounding never share bits.
+    Each stage gets a decorrelated sub-key ``fold_in(key, t.tag)`` of the
+    per-client key, so noise and stochastic rounding never share bits.  The
+    fold-in uses the transform's STABLE per-kind ``tag`` — NOT its position
+    in the stack — so toggling one stage (e.g. turning ``clip_norm`` off)
+    cannot silently shift another stage's random stream: a DP-noise draw is
+    the same bits with or without clipping/quantization around it.
     """
     transforms: Tuple[DeltaTransform, ...] = ()
 
@@ -126,8 +137,12 @@ class TransformStack:
         return not self.transforms
 
     def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
-        for i, t in enumerate(self.transforms):
-            delta = t(delta, jax.random.fold_in(key, i))
+        seen: dict = {}
+        for t in self.transforms:
+            occ = seen.get(t.tag, 0)   # same-kind repeats get fresh streams
+            seen[t.tag] = occ + 1
+            delta = t(delta, jax.random.fold_in(
+                jax.random.fold_in(key, t.tag), occ))
         return delta
 
 

@@ -30,4 +30,9 @@ if [ "$#" -eq 0 ]; then
     python benchmarks/bench_scalability.py \
       --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke \
       --dp-clip 1.0 --dp-noise 0.5 --quantize 8 --hier --regions 2
+  echo "== bench_scalability smoke (semi-sync buffered rounds, lognormal stragglers)"
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_scalability.py \
+      --clients 200 --rounds 3 --clients-per-round 8 --days 30 --smoke \
+      --mode semi_sync --stragglers lognormal --over-select 1.5
 fi

@@ -233,6 +233,52 @@ def test_weighted_sampler_handles_zero_weight_clients():
     assert len(sel) == 3                   # all-zero -> uniform fallback
 
 
+def test_weighted_pad_prefers_distinct_unselected_members():
+    """Padding contract (ISSUE 4 fix): when the without-replacement weighted
+    draw exhausts the nonzero-weight members, the remainder must be DISTINCT
+    unselected members — never duplicates of already-selected clients while
+    unselected ones remain."""
+    members = np.arange(6)
+    w = np.asarray([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    for seed in range(20):
+        sel = sampling.weighted_sampler(np.random.default_rng(seed),
+                                        members, 5, 0, w)
+        assert len(sel) == 5
+        assert len(np.unique(sel)) == 5          # all distinct
+        assert {0, 1, 2} <= set(sel)             # every nonzero first
+
+
+def test_weighted_pad_prefers_nonzero_weight_members():
+    """With m > |members| the duplicate passes kick in only after every
+    member (nonzero-weight AND zero-weight) was selected once."""
+    members = np.arange(4)
+    w = np.asarray([2.0, 1.0, 0.0, 0.0])
+    for seed in range(10):
+        sel = sampling.weighted_sampler(np.random.default_rng(seed),
+                                        members, 6, 0, w)
+        ids, counts = np.unique(sel, return_counts=True)
+        assert set(ids) == set(members)          # everyone in before dups
+        assert counts.max() <= 2
+
+
+def test_uniform_pad_cycles_evenly_instead_of_resampling():
+    """m > |members|: duplicates are evenly-cycled shuffles — no member
+    appears k+2 times before every member appears k+1 times (the old pad
+    resampled WITH replacement and could triple a member while others
+    appeared once)."""
+    members = np.arange(10, 16)
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        sel = sampling.uniform_sampler(rng, members, 9, 0)
+        ids, counts = np.unique(sel, return_counts=True)
+        assert len(sel) == 9
+        assert set(ids) == set(members)          # every member at least once
+        assert counts.max() <= 2
+    sel = sampling.uniform_sampler(np.random.default_rng(0), members, 12, 0)
+    ids, counts = np.unique(sel, return_counts=True)
+    assert (counts == 2).all()                   # m = 2n: exactly twice each
+
+
 def test_make_sampler_rejects_unknown():
     with pytest.raises(ValueError):
         sampling.make_sampler("stratified")
