@@ -21,23 +21,40 @@ ladder point plus the accuracy/MAPE delta vs the untransformed flat
 baseline at the top point — the cost of privacy + compression in both
 wall-clock and forecast quality.
 
-**Round-pacing axis** (``--mode semi_sync``): semi-synchronous buffered
-rounds vs the synchronous baseline under simulated stragglers
-(``--stragglers lognormal|heavy_tail``).  Both modes train under the SAME
-latency model (compute ∝ windows x epochs, uplink ∝ payload bytes); sync
-pays the per-round max — the straggler gates the round — while semi-sync
-over-selects ``--over-select * m`` clients, flushes at the ``--buffer-k``-th
-arrival, and staleness-discounts late folds (``--staleness-alpha``).
-Reports simulated wall-clock to the common target loss plus held-out MAPE
-for both modes — wall-clock-to-accuracy, the metric that matters at the
-edge (arXiv:2201.11248, arXiv:2404.03320).
+**Secure-aggregation axis** (``--secure-agg``, composes with ``--clients``):
+pairwise-masked uploads (``core/secure_agg.py`` — each client's delta
+crosses the wire as individually-uniform noise whose masks cancel in the
+aggregator sum).  The top ladder point additionally trains the same config
+with masking OFF and reports the rounds/s + held-out MAPE overhead of
+masking vs clear.  When ``--dp-clip``/``--dp-noise`` are also set, the
+(eps, delta) accountant's report (``core/privacy.py``) is printed for every
+trained variant.
+
+**Round-pacing axis** (``--mode semi_sync`` / ``--mode async``):
+semi-synchronous buffered rounds vs the synchronous baseline under
+simulated stragglers (``--stragglers lognormal|heavy_tail``).  All modes
+train under the SAME latency model (compute ∝ windows x epochs, uplink ∝
+payload bytes); sync pays the per-round max — the straggler gates the
+round — while semi-sync over-selects ``--over-select * m`` clients, flushes
+at the ``--buffer-k``-th arrival, and staleness-discounts late folds
+(``--staleness-alpha``).  ``--mode async`` additionally runs the
+fully-asynchronous (FedAsync-style) corner — ``buffer_k=1``: the clock
+advances to the EARLIEST in-flight arrival and the server steps per
+flush — reported alongside sync and semi-sync.  Reports simulated
+wall-clock to the common target loss plus held-out MAPE for every mode —
+wall-clock-to-accuracy, the metric that matters at the edge
+(arXiv:2201.11248, arXiv:2404.03320).
 
   python benchmarks/bench_scalability.py --clients 10000
   python benchmarks/bench_scalability.py --clients 1000 --hier --dp-clip 1.0
   python benchmarks/bench_scalability.py --clients 1000 \
       --dp-clip 1.0 --dp-noise 0.5 --quantize 8 --hier --regions 2
+  python benchmarks/bench_scalability.py --clients 1000 \
+      --dp-clip 1.0 --dp-noise 0.5 --secure-agg
   python benchmarks/bench_scalability.py --clients 500 --rounds 12 \
       --mode semi_sync --stragglers lognormal --over-select 1.5
+  python benchmarks/bench_scalability.py --clients 500 --rounds 12 \
+      --mode async --stragglers heavy_tail
 """
 from __future__ import annotations
 
@@ -106,23 +123,27 @@ def run_scaling(state: str, max_clients: int, rounds: int = 3,
                 clients_per_round: int = 32, days: int = 120, seed: int = 0,
                 smoke: bool = False, dp_clip: float = 0.0,
                 dp_noise: float = 0.0, quantize: int = 0, hier: bool = False,
-                regions: int = 0):
+                regions: int = 0, secure: bool = False,
+                mask_std: float = 1.0):
     """rounds/s vs total client count N through the streaming provider.
 
     ``dp_clip`` / ``dp_noise`` / ``quantize`` configure the delta-transform
-    stack and ``hier`` the edge->region->cloud aggregation; when any is set,
-    the top ladder point also trains the untransformed flat baseline and
-    reports the accuracy (100-MAPE) delta.  ``smoke`` runs the single top
-    ladder point with no compile warmup — a regression canary for the
-    streaming path, not a measurement.
+    stack, ``hier`` the edge->region->cloud aggregation, and ``secure``
+    pairwise-masked uploads; when any is set, the top ladder point also
+    trains the untransformed flat baseline and reports the accuracy
+    (100-MAPE) delta — plus, under ``secure``, the masked-vs-clear
+    rounds/s + MAPE overhead.  ``smoke`` runs the single top ladder point
+    with no compile warmup — a regression canary for the streaming path,
+    not a measurement.
     """
     import jax
     n_dev = len(jax.devices())
     hier = hier or regions > 0             # --regions implies --hier
-    pipeline_on = bool(dp_clip or dp_noise or quantize or hier)
+    pipeline_on = bool(dp_clip or dp_noise or quantize or hier or secure)
     pipe = dict(dp_clip=dp_clip, dp_noise=dp_noise, quantize_bits=quantize,
                 aggregation="hierarchical" if hier else "flat",
-                n_regions=regions if hier else 0)
+                n_regions=regions if hier else 0, secure_agg=secure,
+                secure_mask_std=mask_std)
     mesh = aggregation.make_mesh(FLConfig(**pipe).aggregation_config)
     mesh_desc = ("x".join(str(mesh.shape[a]) for a in mesh.axis_names)
                  + " (" + ", ".join(mesh.axis_names) + ")")
@@ -134,8 +155,11 @@ def run_scaling(state: str, max_clients: int, rounds: int = 3,
           f"{n_dev}-device mesh ({mesh_desc}), m={clients_per_round}/round, "
           f"{rounds} rounds, {days}-day histories")
     if pipeline_on:
+        sec = (f"on (pairwise masking, std={mask_std:g})" if secure
+               else "off")
         print(f"# delta transforms: clip={dp_clip} noise={dp_noise} "
-              f"quantize={quantize}b; aggregation={pipe['aggregation']}")
+              f"quantize={quantize}b; aggregation={pipe['aggregation']}; "
+              f"secure_agg={sec}")
     print("n_clients,rounds,m_per_round,train_s,rounds_per_s,final_loss")
     rows = []
     res = None
@@ -158,10 +182,57 @@ def run_scaling(state: str, max_clients: int, rounds: int = 3,
               f"{res.loss_history[-1]:.5f}")
     print("# per-round cost is O(m + model), flat in N — the provider only "
           "touches selected clients")
+    if res is not None and res.privacy is not None:
+        from repro.core import privacy as privacy_mod
+        print("# " + privacy_mod.format_report(res.privacy))
+    if secure:
+        _report_secure_overhead(state, ladder[-1], rounds, clients_per_round,
+                                days, seed, fcfg, pipe, mesh, res,
+                                rows[-1][1], smoke)
     if pipeline_on and not smoke:
         _report_pipeline_delta(state, ladder[-1], rounds, clients_per_round,
                                days, seed, fcfg, res)
     return rows
+
+
+def _report_secure_overhead(state, n, rounds, clients_per_round, days, seed,
+                            fcfg, pipe, mesh, res_masked, masked_rps,
+                            smoke=False):
+    """Cost of pairwise masking at the top ladder point: train the SAME
+    config with masking off (same transforms, topology, seed) and report
+    rounds/s + held-out MAPE for both — masks cancel in the sum, so the
+    MAPE delta should be float noise while rounds/s pays the O(m^2 * params)
+    mask generation."""
+    clear = dict(pipe, secure_agg=False)
+    prov = ClientWindowProvider.from_synthetic(
+        state, range(n), fcfg.lookback, fcfg.horizon, days=days)
+    flcfg = FLConfig(n_clients=n, clients_per_round=clients_per_round,
+                     rounds=rounds, lr=0.05, loss="ew_mse", n_clusters=0,
+                     server_opt="fedavg_weighted", seed=seed, **clear)
+    if not smoke:
+        # the masked ladder timing was warmed up (its jit trace keys on
+        # scfg); give the clear variant the same courtesy or its timing
+        # eats a fresh XLA compile and the overhead factor reads backwards
+        # (under --smoke both variants run cold, which is symmetric enough
+        # for a canary)
+        fedavg.run_federated_training(
+            prov, fcfg, dataclasses.replace(flcfg, rounds=1), mesh=mesh)
+    t0 = time.time()
+    res_clear = fedavg.run_federated_training(prov, fcfg, flcfg,
+                                              mesh=mesh)[-1]
+    clear_rps = rounds / (time.time() - t0)
+    held = ClientWindowProvider.from_synthetic(
+        state, range(n, n + (5 if smoke else 50)), fcfg.lookback,
+        fcfg.horizon, days=days)
+    m_mask = fedavg.evaluate_unseen_clients(res_masked.params, held, fcfg)
+    m_clear = fedavg.evaluate_unseen_clients(res_clear.params, held, fcfg)
+    print("variant,rounds_per_s,heldout_mape_pct")
+    print(f"clear,{clear_rps:.2f},{m_clear['mape']:.2f}")
+    print(f"masked,{masked_rps:.2f},{m_mask['mape']:.2f}")
+    print(f"# secure-agg overhead at n={n}: "
+          f"{clear_rps / max(masked_rps, 1e-9):.2f}x slower rounds, "
+          f"{m_mask['mape'] - m_clear['mape']:+.3f} pp MAPE (masks cancel "
+          "in the aggregate — any residual is float rounding)")
 
 
 def _report_pipeline_delta(state, n, rounds, clients_per_round, days, seed,
@@ -190,39 +261,62 @@ def _report_pipeline_delta(state, n, rounds, clients_per_round, days, seed,
           f"pp MAPE vs untransformed flat baseline (50 held-out buildings)")
 
 
-def run_semi_sync(state: str, n_clients: int, rounds: int,
-                  clients_per_round: int, days: int, seed: int,
-                  stragglers: str, jitter: float, over_select: float,
-                  buffer_k: int, staleness_alpha: float,
-                  smoke: bool = False):
-    """Semi-sync buffered rounds vs the sync baseline under stragglers:
-    simulated wall-clock to the common target loss + held-out MAPE."""
+def run_pacing(state: str, n_clients: int, rounds: int,
+               clients_per_round: int, days: int, seed: int,
+               stragglers: str, jitter: float, over_select: float,
+               buffer_k: int, staleness_alpha: float,
+               smoke: bool = False, include_async: bool = False,
+               dp_clip: float = 0.0, dp_noise: float = 0.0,
+               quantize: int = 0, secure: bool = False,
+               mask_std: float = 1.0):
+    """Round-pacing modes under stragglers: simulated wall-clock to the
+    common target loss + held-out MAPE.
+
+    ``sync`` vs ``semi_sync`` always; ``include_async`` adds the
+    fully-asynchronous (FedAsync-style) corner the ROADMAP called out as
+    now-trivial: ``buffer_k=1`` — every flush fires at the FIRST in-flight
+    arrival and the server steps per flush, so no update ever waits for a
+    peer (late ones fold with the staleness discount)."""
     fcfg = ForecasterConfig(cell="lstm", hidden_dim=64)
     prov = ClientWindowProvider.from_synthetic(
         state, range(n_clients), fcfg.lookback, fcfg.horizon, days=days)
     # buffer_k=0 on the CLI means "flush at m of the over-selected m'"
     # (the semi-sync sweet spot), not the engine's wait-for-all default
     bk = buffer_k or clients_per_round
+    # the transform/privacy knobs apply to EVERY pacing mode (with secure
+    # aggregation, semi-sync/async folds become cohort-atomic) — silently
+    # dropping them here would report a clear run as a masked one
     common = dict(n_clients=n_clients, clients_per_round=clients_per_round,
                   rounds=rounds, lr=0.05, loss="ew_mse", n_clusters=0,
                   server_opt="fedavg_weighted", seed=seed,
-                  stragglers=stragglers, straggler_jitter=jitter)
-    res = {}
-    for mode, cfg in (
-            ("sync", FLConfig(**common)),
-            ("semi_sync", FLConfig(**common, mode="semi_sync",
-                                   over_select=over_select, buffer_k=bk,
-                                   staleness_alpha=staleness_alpha))):
-        res[mode] = fedavg.run_federated_training(prov, fcfg, cfg)[-1]
-    # common target: the worse of the two final losses — both reached it,
-    # so "time to target" is well-defined for each
-    target = max(r.loss_history[-1] for r in res.values())
+                  stragglers=stragglers, straggler_jitter=jitter,
+                  dp_clip=dp_clip, dp_noise=dp_noise, quantize_bits=quantize,
+                  secure_agg=secure, secure_mask_std=mask_std)
+    if dp_clip or dp_noise or quantize or secure:
+        print(f"# pacing with transforms: clip={dp_clip} noise={dp_noise} "
+              f"quantize={quantize}b secure_agg={'on' if secure else 'off'}"
+              + (" (cohort-atomic folds)" if secure else ""))
+    configs = [("sync", FLConfig(**common)),
+               ("semi_sync", FLConfig(**common, mode="semi_sync",
+                                      over_select=over_select, buffer_k=bk,
+                                      staleness_alpha=staleness_alpha))]
+    if include_async:
+        configs.append(
+            ("async", FLConfig(**common, mode="semi_sync",
+                               over_select=over_select, buffer_k=1,
+                               staleness_alpha=staleness_alpha)))
+    res = {mode: fedavg.run_federated_training(prov, fcfg, cfg)[-1]
+           for mode, cfg in configs}
+    # common target: the worst of the final (finite) losses — every mode
+    # reached it, so "time to target" is well-defined for each
+    target = max(fedavg.final_loss(r) for r in res.values())
     held = ClientWindowProvider.from_synthetic(
         state, range(n_clients, n_clients + (5 if smoke else 50)),
         fcfg.lookback, fcfg.horizon, days=days)
     print(f"# round pacing — {n_clients} clients, m={clients_per_round}"
           f"/round (semi_sync dispatches m'={int(np.ceil(over_select * clients_per_round))}, "
-          f"flush at k={bk}, alpha={staleness_alpha}), {rounds} rounds, "
+          f"flush at k={bk}; async flushes at k=1, per-arrival server "
+          f"steps; alpha={staleness_alpha}), {rounds} rounds, "
           f"stragglers={stragglers} jitter={jitter}")
     print("mode,rounds,final_loss,sim_wall_s,sim_s_to_target,"
           "heldout_mape_pct,heldout_accuracy_pct")
@@ -230,7 +324,7 @@ def run_semi_sync(state: str, n_clients: int, rounds: int,
     for mode, r in res.items():
         met = fedavg.evaluate_unseen_clients(r.params, held, fcfg)
         t_tgt = fedavg.time_to_target(r, target)
-        print(f"{mode},{rounds},{r.loss_history[-1]:.5f},"
+        print(f"{mode},{rounds},{fedavg.final_loss(r):.5f},"
               f"{r.sim_times[-1]:.1f},{t_tgt:.1f},{met['mape']:.2f},"
               f"{met['accuracy']:.2f}")
         rows.append((mode, t_tgt, met["mape"]))
@@ -238,6 +332,11 @@ def run_semi_sync(state: str, n_clients: int, rounds: int,
     print(f"# semi_sync reaches the target loss in {rows[1][1]:.1f} "
           f"simulated s vs sync's {rows[0][1]:.1f} s ({speedup:.2f}x) — "
           "stragglers no longer gate the round")
+    if include_async:
+        print(f"# fully-async (buffer_k=1): {rows[2][1]:.1f} s to target, "
+              f"held-out MAPE {rows[2][2]:.2f}% vs semi_sync's "
+              f"{rows[1][2]:.2f}% — per-arrival steps trade freshness for "
+              "staleness-discounted noise")
     return rows
 
 
@@ -245,17 +344,22 @@ def main(state="CA", server_opt="fedavg", prox_mu=0.0, clients=None,
          rounds=3, clients_per_round=32, days=120, smoke=False,
          dp_clip=0.0, dp_noise=0.0, quantize=0, hier=False, regions=0,
          mode="sync", stragglers="lognormal", jitter=1.0, over_select=1.5,
-         buffer_k=0, staleness_alpha=0.5, seed=0):
-    if mode == "semi_sync":
-        return run_semi_sync(state, clients or 200, rounds,
-                             clients_per_round, days, seed, stragglers,
-                             jitter, over_select, buffer_k, staleness_alpha,
-                             smoke=smoke)
+         buffer_k=0, staleness_alpha=0.5, seed=0, secure_agg=False,
+         mask_std=1.0):
+    if mode in ("semi_sync", "async"):
+        return run_pacing(state, clients or 200, rounds,
+                          clients_per_round, days, seed, stragglers,
+                          jitter, over_select, buffer_k, staleness_alpha,
+                          smoke=smoke, include_async=(mode == "async"),
+                          dp_clip=dp_clip, dp_noise=dp_noise,
+                          quantize=quantize, secure=secure_agg,
+                          mask_std=mask_std)
     if clients:
         return run_scaling(state, clients, rounds, clients_per_round, days,
                            seed=seed, smoke=smoke, dp_clip=dp_clip,
                            dp_noise=dp_noise, quantize=quantize, hier=hier,
-                           regions=regions)
+                           regions=regions, secure=secure_agg,
+                           mask_std=mask_std)
     opts = SERVER_OPTS if server_opt == "all" else (server_opt,)
     return {opt: run_axis(state, opt, prox_mu) for opt in opts}
 
@@ -288,10 +392,18 @@ if __name__ == "__main__":
     ap.add_argument("--regions", type=int, default=0,
                     help="# of regions (implies --hier; 0 = auto from "
                          "devices)")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-masked uploads (secure aggregation); "
+                         "reports masked-vs-clear overhead at the top "
+                         "ladder point")
+    ap.add_argument("--mask-std", type=float, default=1.0,
+                    help="per-pair secure-agg mask scale")
     ap.add_argument("--mode", default="sync",
-                    choices=("sync", "semi_sync"),
+                    choices=("sync", "semi_sync", "async"),
                     help="round pacing: semi_sync = buffered "
-                         "staleness-weighted rounds vs the sync baseline")
+                         "staleness-weighted rounds vs the sync baseline; "
+                         "async additionally runs the fully-async "
+                         "buffer_k=1 per-arrival corner")
     ap.add_argument("--stragglers", default="lognormal",
                     choices=("deterministic", "lognormal", "heavy_tail"),
                     help="simulated client-latency distribution")
@@ -310,4 +422,5 @@ if __name__ == "__main__":
          args.rounds, args.clients_per_round, args.days, args.smoke,
          args.dp_clip, args.dp_noise, args.quantize, args.hier, args.regions,
          args.mode, args.stragglers, args.jitter, args.over_select,
-         args.buffer_k, args.staleness_alpha, args.seed)
+         args.buffer_k, args.staleness_alpha, args.seed, args.secure_agg,
+         args.mask_std)

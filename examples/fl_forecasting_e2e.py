@@ -62,6 +62,15 @@ def main():
                     help="Gaussian DP noise multiplier (std = z*C; 0 = off)")
     ap.add_argument("--quantize", type=int, default=0,
                     help="stochastic b-bit delta quantization (0 = off)")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-masked uploads whose masks cancel in "
+                         "the aggregate; size --mask-std against w*||delta||"
+                         " under weighted aggregation (docs/privacy.md)")
+    ap.add_argument("--mask-std", type=float, default=1.0,
+                    help="per-pair secure-agg mask scale")
+    ap.add_argument("--privacy-delta", type=float, default=1e-5,
+                    help="target delta for the (eps, delta) accountant "
+                         "(reported when --dp-clip AND --dp-noise are set)")
     ap.add_argument("--hier", action="store_true",
                     help="hierarchical edge->region->cloud aggregation (the "
                          "(region, clients) mesh is built automatically)")
@@ -116,6 +125,8 @@ def main():
                 prox_mu=args.prox_mu, sampling=args.sampling,
                 holdout_frac=args.holdout_frac, dp_clip=args.dp_clip,
                 dp_noise=args.dp_noise, quantize_bits=args.quantize,
+                secure_agg=args.secure_agg, secure_mask_std=args.mask_std,
+                privacy_delta=args.privacy_delta,
                 aggregation="hierarchical" if args.hier else "flat",
                 mode=args.mode, over_select=args.over_select,
                 buffer_k=args.buffer_k,
@@ -129,9 +140,12 @@ def main():
                 straggler_jitter=args.straggler_jitter)
 
     pipe = ""
-    if args.dp_clip or args.dp_noise or args.quantize or args.hier:
+    if (args.dp_clip or args.dp_noise or args.quantize or args.hier
+            or args.secure_agg):
         pipe = (f", transforms clip={args.dp_clip}/noise={args.dp_noise}"
-                f"/quant={args.quantize}b, agg={base['aggregation']}")
+                f"/quant={args.quantize}b"
+                f"{'/masked' if args.secure_agg else ''}"
+                f", agg={base['aggregation']}")
     if args.mode == "semi_sync":
         thresh = (f"buffer_k={args.buffer_k}" if args.buffer_k
                   else f"buffer_frac={args.buffer_frac}")
@@ -148,6 +162,16 @@ def main():
         train_data, fcfg, FLConfig(**base, n_clusters=0),
         log_every=args.rounds // 2)
 
+    # privacy: the (eps, delta) accountant composes the per-round clipped +
+    # noised release across rounds (core/privacy.py; see docs/privacy.md) —
+    # reported per trained model since each cluster has its own sampling rate
+    if args.dp_clip or args.dp_noise:
+        from repro.core import privacy as privacy_mod
+        print()
+        for cid, res in sorted(res_c.items()):
+            print(f"cluster {cid} " + privacy_mod.format_report(res.privacy))
+        print("global    " + privacy_mod.format_report(res_g[-1].privacy))
+
     # round pacing: simulated wall-clock (the edge metric) for the global
     # model; under semi_sync, also train the sync baseline with the SAME
     # straggler model and compare simulated time to the common target loss
@@ -158,8 +182,10 @@ def main():
         res_sync = fedavg.run_federated_training(
             train_data, fcfg, FLConfig(**{**base, "mode": "sync"},
                                        n_clusters=0))
-        target = max(res_g[-1].loss_history[-1],
-                     res_sync[-1].loss_history[-1])
+        # last FINITE losses: cohort-atomic pacing (--secure-agg) records
+        # nan for flushes that complete no cohort
+        target = max(fedavg.final_loss(res_g[-1]),
+                     fedavg.final_loss(res_sync[-1]))
         tt = {k: fedavg.time_to_target(r, target)
               for k, r in (("semi_sync", res_g[-1]),
                            ("sync", res_sync[-1]))}

@@ -317,6 +317,60 @@ class TransformConfig:
 
 
 @dataclass(frozen=True)
+class SecureAggConfig:
+    """Secure-aggregation stage: pairwise masking (``core/secure_agg.py``).
+
+    When ``enabled``, every client adds antisymmetric pairwise masks
+    (``mask_ij = -mask_ji``, derived from the dispatch cohort's shared round
+    key) to its transformed delta before it leaves the device, so the
+    honest-but-curious server sees per-client uploads whose masks cancel
+    exactly in the aggregator sum.  ``mask_std`` is the per-pair mask scale
+    on the client's WEIGHTED contribution ``w_i * y_i`` — masks are scaled
+    ``1/w_i`` so they cancel in the weighted sum, so the raw upload carries
+    mask noise ``N(0, (m-1) * mask_std^2 / w_i^2)`` per coordinate.  Under
+    uniform aggregation (weights 0/1) that equals ``mask_std * sqrt(m-1)``;
+    under count-weighted aggregation, size ``mask_std`` against
+    ``w * ||delta||`` or heavy clients upload weakly-masked deltas (see
+    ``core/secure_agg.py`` and docs/privacy.md).  In semi-sync mode,
+    enabling secure aggregation forces cohort-atomic folds (see
+    :class:`AsyncConfig`).
+    """
+    enabled: bool = False
+    mask_std: float = 1.0
+
+    def __post_init__(self):
+        if self.mask_std <= 0:
+            raise ValueError(f"mask_std must be > 0, got {self.mask_std}")
+
+
+@dataclass(frozen=True)
+class PrivacyConfig:
+    """(epsilon, delta) accounting for the DP transform stage
+    (``core/privacy.py``).
+
+    The accountant composes the per-round subsampled Gaussian mechanism
+    (clip ``C`` + noise ``z*C`` from :class:`TransformConfig`, sampling rate
+    ``m/N``) across rounds via RDP at integer orders and reports a running
+    ``(epsilon, delta)``.  ``delta`` is the target failure probability;
+    ``orders`` overrides the default integer RDP order grid (empty = the
+    default ``core/privacy.py::DEFAULT_ORDERS``) — a library-level knob for
+    direct ``privacy.make_accountant(tcfg, PrivacyConfig(...), q)`` users;
+    the flat ``FLConfig`` facade surfaces only ``privacy_delta``.
+    Accounting is only meaningful with BOTH clip and noise on — otherwise
+    the accountant reports ``epsilon = inf`` (disabled).
+    """
+    delta: float = 1e-5
+    orders: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if any(o < 2 for o in self.orders):
+            raise ValueError("RDP orders must be >= 2, got "
+                             f"{self.orders}")
+
+
+@dataclass(frozen=True)
 class AggregationConfig:
     """Aggregate stage: cross-client reduction topology (``core/aggregation.py``).
 
@@ -351,9 +405,17 @@ class LatencyConfig:
     (rare but extreme stalls).  ``jitter=0`` makes every distribution
     deterministic.  Draws are a pure function of (seed, round, slot), so a
     simulated schedule replays exactly.
+
+    The default constants are calibrated against the paper's measured
+    70-100 s Pi-4B rounds (§5.5); the term-by-term derivation lives in the
+    ``core/latency.py`` module docstring (and README): one year of 15-min
+    readings => ~26.3k train windows per client, so 3.2 ms/(window*epoch)
+    puts a jitter-free E=1 round at ~84 s compute + ~0.6 s uplink — mid-band
+    of the measurement.
     """
     distribution: str = "deterministic"  # deterministic | lognormal | heavy_tail
-    compute_s_per_window_epoch: float = 2e-3   # local SGD cost per window*epoch
+    compute_s_per_window_epoch: float = 3.2e-3  # Pi-4B local SGD cost per
+    #                                  # window*epoch (see core/latency.py)
     uplink_bytes_per_s: float = 1e6            # edge uplink bandwidth
     jitter: float = 0.5                        # straggler spread (0 = none)
 
@@ -390,12 +452,21 @@ class AsyncConfig:
     ``buffer_k`` at or above it silently waits for every straggler.  With
     both at 0 the server waits for all dispatched (bit-identical to sync
     under zero-jitter latency); setting both raises.
+
+    ``cohort_atomic`` makes folds atomic per DISPATCH cohort: a round's
+    updates enter the fold only once EVERY member of that dispatch set has
+    arrived, so a whole cohort folds late together (all with the same
+    staleness tau) instead of trickling in per arrival.  This is the fold
+    granularity secure aggregation requires — pairwise masks cancel only
+    over a complete cohort — and is forced on automatically when
+    :class:`SecureAggConfig` is enabled.
     """
     mode: str = "sync"                 # sync | semi_sync
     over_select: float = 1.0           # m' = ceil(over_select * m) >= m
     buffer_k: int = 0                  # absolute flush threshold (0 = off)
     buffer_frac: float = 0.0           # relative threshold (0 = off)
     staleness_alpha: float = 0.5       # weight discount exponent (0 = none)
+    cohort_atomic: bool = False        # fold whole dispatch cohorts only
     latency: LatencyConfig = field(default_factory=LatencyConfig)
 
     def __post_init__(self):
@@ -475,6 +546,12 @@ class FLConfig:
     dp_clip: float = 0.0               # per-client delta L2 clip C (0 = off)
     dp_noise: float = 0.0              # Gaussian noise multiplier (0 = off)
     quantize_bits: int = 0             # stochastic int quantize (0 = off)
+    # ------------------------------------------- secure-agg / DP accounting
+    secure_agg: bool = False           # pairwise-masked uploads (masks cancel
+    #                                  # in the aggregator sum)
+    secure_mask_std: float = 1.0       # per-pair mask scale
+    privacy_delta: float = 1e-5        # target delta for the (eps, delta)
+    #                                  # accountant (needs dp_clip + dp_noise)
     # ------------------------------------------------- aggregation stage
     aggregation: str = "flat"          # flat | hierarchical
     n_regions: int = 0                 # hierarchical: # of regions (0 = auto)
@@ -485,6 +562,8 @@ class FLConfig:
     buffer_frac: float = 0.0           # relative flush threshold (0 = off;
     #                                  # both 0 = wait for all dispatched)
     staleness_alpha: float = 0.5       # late-update weight discount exponent
+    cohort_atomic: bool = False        # fold whole dispatch cohorts only
+    #                                  # (forced on by secure_agg)
     stragglers: str = "deterministic"  # latency distribution (see LatencyConfig)
     straggler_jitter: float = 0.5      # straggler spread (ignored when
     #                                  # stragglers="deterministic")
@@ -493,7 +572,8 @@ class FLConfig:
         # materializing every typed stage view runs that stage's own
         # validation -> bad names/knobs fail here, at construction
         _ = (self.sampling_config, self.client_opt, self.transform,
-             self.aggregation_config, self.server, self.async_config)
+             self.aggregation_config, self.server, self.async_config,
+             self.secure, self.privacy)
 
     # ------------------------------------------------- typed stage views
     @property
@@ -519,13 +599,26 @@ class FLConfig:
 
     @property
     def async_config(self) -> AsyncConfig:
+        # secure aggregation forces cohort-atomic folds: pairwise masks
+        # cancel only over a complete dispatch cohort
         return AsyncConfig(mode=self.mode, over_select=self.over_select,
                            buffer_k=self.buffer_k,
                            buffer_frac=self.buffer_frac,
                            staleness_alpha=self.staleness_alpha,
+                           cohort_atomic=self.cohort_atomic or
+                           self.secure_agg,
                            latency=LatencyConfig(
                                distribution=self.stragglers,
                                jitter=self.straggler_jitter))
+
+    @property
+    def secure(self) -> SecureAggConfig:
+        return SecureAggConfig(enabled=self.secure_agg,
+                               mask_std=self.secure_mask_std)
+
+    @property
+    def privacy(self) -> PrivacyConfig:
+        return PrivacyConfig(delta=self.privacy_delta)
 
     @property
     def server(self) -> ServerOptConfig:

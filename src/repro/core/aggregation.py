@@ -26,9 +26,21 @@ shared by every topology.
     The no-mesh (vmap, pseudo-distributed) execution path, where per-shard
     sums are already global: the collective is the identity.
 
-This seam is what turns the remaining ROADMAP items (secure aggregation,
-async/staleness-weighted rounds) into new ``Aggregator`` implementations
-rather than engine rewrites.
+**Linearity contract (mask cancellation).**  ``reduce`` MUST be a plain
+linear sum of the per-shard values (psum / psum-of-psums / identity) —
+no clipping, averaging, or reordering beyond float summation order.  The
+secure-aggregation stage (``core/secure_agg.py``) relies on this: every
+client's upload carries antisymmetric pairwise masks (``mask_ij =
+-mask_ji``) whose sum over the dispatch cohort is zero, so the masks
+cancel in ``reduce`` no matter how the cohort is sharded — each pair's two
+halves may land on different shards (flat), different regions
+(hierarchical), or the same vmap lane, and the cancellation is identical
+up to float summation order (pinned by tests/test_privacy.py on all three
+topologies).  An aggregator that broke linearity (e.g. a trimmed-mean
+topology) would need masking disabled — validate eagerly if you add one.
+
+This seam is what turns the remaining ROADMAP items into new
+``Aggregator`` implementations rather than engine rewrites.
 """
 from __future__ import annotations
 
@@ -56,7 +68,11 @@ class Aggregator(Protocol):
         ...
 
     def reduce(self, x: jax.Array) -> jax.Array:
-        """Sum one per-shard array across all client shards."""
+        """Sum one per-shard array across all client shards.
+
+        Must be a LINEAR sum (see the module's mask-cancellation contract):
+        secure-aggregation masks cancel in this reduction.
+        """
         ...
 
 

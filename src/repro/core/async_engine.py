@@ -29,6 +29,21 @@ configuration is **bit-identical** to ``mode="sync"`` on both the vmap and
 shard_map execution paths (pinned by test).  The buffer itself lives at the
 cloud server, so hierarchical topologies only affect the (unchanged)
 client-update stage layout.
+
+**Secure aggregation** (``SecureAggConfig``, ``AsyncConfig.cohort_atomic``):
+pairwise masks are applied at dispatch, keyed by the DISPATCH round's shared
+key, and cancel only over a complete dispatch cohort — so with masking on,
+folds become cohort-ATOMIC: a round's updates wait in the buffer until every
+member of that dispatch set has arrived, then fold as one group.  All
+members of a late cohort share one staleness tau (current − dispatch round),
+hence ONE discount factor, which scales every member's mask equally and
+preserves cancellation.  A flush whose clock completes no cohort advances
+time without a server step (``SemiSyncState.empty_flushes``).
+
+**Fully-async pacing** (FedAsync-style) is the ``buffer_k=1`` corner: the
+clock advances to the EARLIEST in-flight arrival and the server steps per
+flush — benchmarked against sync/semi-sync by ``bench_scalability --mode
+async``.
 """
 from __future__ import annotations
 
@@ -42,7 +57,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import (AggregationConfig, AsyncConfig,
-                                ForecasterConfig, TransformConfig)
+                                ForecasterConfig, SecureAggConfig,
+                                TransformConfig)
 from repro.core import aggregation as aggregation_mod
 from repro.core import server_opt as server_opt_mod
 from repro.core import transforms as transforms_mod
@@ -61,11 +77,14 @@ def staleness_discount(tau, alpha: float):
 
 # ------------------------------------------------------------ client stage
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "loss", "tcfg", "cell_impl"))
+                   static_argnames=("cfg", "loss", "tcfg", "cell_impl",
+                                    "scfg"))
 def client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
                   cfg: ForecasterConfig, loss: Callable,
                   tcfg: TransformConfig = TransformConfig(),
-                  cell_impl: str = "jnp"):
+                  cell_impl: str = "jnp",
+                  scfg: "SecureAggConfig" = None, round_key=None,
+                  w_full=None, slots=None):
     """Local-update + transform stages alone: per-client TRANSFORMED deltas
     ``stack(w_i - w_global)`` + losses, WITHOUT aggregation — the buffered
     server needs each client's contribution individually so it can release
@@ -74,14 +93,24 @@ def client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
     compressed deltas ever leave the client (the server's straggler buffer
     must not hold raw fp32 updates), and the simulated uplink charges the
     post-quantize payload.  ``keys``: (M, 2) dispatch-round transform keys.
+
+    With secure aggregation, pairwise masks are applied HERE, at dispatch,
+    keyed by the dispatch cohort's shared ``round_key`` and gated/scaled by
+    the cohort weight vector ``w_full`` — so the buffer holds only masked
+    uploads, and a cohort's masks cancel whenever the whole cohort is
+    folded together (``AsyncConfig.cohort_atomic``).  ``slots`` carries the
+    clients' GLOBAL dispatch slots on the shard_map path (None = local
+    view, the vmap case).
     """
+    from repro.core import fedavg as fedavg_mod
     locals_, client_loss = jax.vmap(
         local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
         params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
     deltas = jax.tree.map(lambda l, g: l - g, locals_, params)
-    stack = transforms_mod.make_stack(tcfg)
+    stack = transforms_mod.make_stack(tcfg, scfg)
     if not stack.is_identity:
-        deltas = jax.vmap(stack)(deltas, keys)
+        deltas = fedavg_mod.apply_stack(stack, deltas, keys, slots=slots,
+                                        w_full=w_full, round_key=round_key)
     return deltas, client_loss
 
 
@@ -89,22 +118,45 @@ def client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
 def make_sharded_client_deltas(mesh, cfg: ForecasterConfig, loss: Callable,
                                tcfg: TransformConfig = TransformConfig(),
                                acfg: AggregationConfig = AggregationConfig(),
-                               cell_impl: str = "jnp"):
+                               cell_impl: str = "jnp",
+                               scfg: "SecureAggConfig" = None):
     """Mesh-sharded client stage: same layout as the fused pipeline round
     (clients over the 1-D axis, or the 2-D (region, clients) grid), but the
     per-client transformed deltas come back stacked instead of reduced —
     the transform stack still runs INSIDE the shard_map body, so only
-    privatized/compressed deltas cross shard boundaries."""
+    privatized/compressed deltas cross shard boundaries.
+
+    With secure aggregation (``scfg.enabled``) the returned fn's signature
+    grows the cohort context, mirroring ``fedavg.make_pipeline_round``:
+    ``fn(params, x, y, batch_idx, keys, slots, w_full, round_key, lr,
+    prox_mu)`` — global ``slots`` shard with the clients, the cohort weight
+    vector and round key replicate.
+    """
     agg = aggregation_mod.make_aggregator(acfg, mesh)
     pspec = agg.pspec()
+    secure_on = scfg is not None and scfg.enabled
 
-    def body(params, x, y, batch_idx, keys, lr, prox_mu):
+    if not secure_on:
+        def body(params, x, y, batch_idx, keys, lr, prox_mu):
+            return client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
+                                 cfg, loss, tcfg, cell_impl)
+
+        return jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), pspec, pspec, pspec, pspec, P(), P()),
+            out_specs=(pspec, pspec),
+            check_vma=False))
+
+    def secure_body(params, x, y, batch_idx, keys, slots, w_full, round_key,
+                    lr, prox_mu):
         return client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
-                             cfg, loss, tcfg, cell_impl)
+                             cfg, loss, tcfg, cell_impl, scfg, round_key,
+                             w_full, slots)
 
     return jax.jit(shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), pspec, pspec, pspec, pspec, P(), P()),
+        secure_body, mesh=mesh,
+        in_specs=(P(), pspec, pspec, pspec, pspec, pspec, P(), P(), P(),
+                  P()),
         out_specs=(pspec, pspec),
         check_vma=False))
 
@@ -157,13 +209,21 @@ def _stack_padded(pending: List[PendingUpdate], weights: np.ndarray):
 class SemiSyncState:
     """The buffered server's host-side event state: pending updates + the
     simulated clock.  One per :class:`~repro.core.fedavg.RoundEngine`;
-    reset between independent trainings (per cluster)."""
+    reset between independent trainings (per cluster).
+
+    ``cohort_sizes`` tracks how many REAL clients each dispatch round put
+    in flight — the bookkeeping cohort-atomic folds (secure aggregation)
+    need to decide when a cohort is complete.
+    """
 
     def __init__(self) -> None:
         self.pending: List[PendingUpdate] = []
         self.clock = 0.0
         self.late_folds = 0            # stale updates folded so far
         self.max_staleness = 0         # largest tau seen
+        self.cohort_sizes: dict = {}   # dispatch round -> # real dispatched
+        self.empty_flushes = 0         # cohort-atomic flushes with no
+        #                              # complete cohort (no server step)
 
     def reset(self) -> None:
         self.__init__()
@@ -192,9 +252,13 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
     # -- flush point: clock advances to the k-th earliest arrival among
     # everything in flight (old stragglers + this round's dispatch); a
     # fractional threshold resolves against THIS round's dispatch size, so
-    # it adapts to uneven cluster/holdout memberships
-    pend_finish = np.asarray([p.finish_time for p in ss.pending] +
-                             list(finish))
+    # it adapts to uneven cluster/holdout memberships.  Under cohort-atomic
+    # folds the buffer can hold ARRIVED updates whose cohort is still
+    # incomplete — those must not gate the clock (they'd pin it to past
+    # arrival times forever), so the k-count sees only unarrived work.
+    in_flight = [p.finish_time for p in ss.pending
+                 if not acfg.cohort_atomic or p.finish_time > ss.clock]
+    pend_finish = np.asarray(in_flight + list(finish))
     if acfg.buffer_frac:
         k_cfg = max(1, int(np.ceil(acfg.buffer_frac * len(finish))))
     else:
@@ -216,25 +280,62 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
     # now — the simulation reveals them per the event clock — buffer, fold
     lr = jnp.float32(engine.flcfg.lr)
     mu = jnp.float32(engine.prox_mu)
-    keys = engine.round_keys(round_idx, x.shape[0], stream)
+    m = x.shape[0]
+    keys = engine.round_keys(round_idx, m, stream)
+    base_w = w_in if engine.weighted else (w_in > 0).astype(np.float32)
     if engine._client_fn is not None:
-        deltas, closs = engine._client_fn(params, x, y, batch_idx, keys,
-                                          lr, mu)
+        if engine.secure is not None:
+            rk = engine.base_round_key(round_idx, stream)
+            deltas, closs = engine._client_fn(
+                params, x, y, batch_idx, keys, jnp.arange(m),
+                jnp.asarray(base_w), rk, lr, mu)
+        else:
+            deltas, closs = engine._client_fn(params, x, y, batch_idx, keys,
+                                              lr, mu)
     else:
+        rk = (engine.base_round_key(round_idx, stream)
+              if engine.secure is not None else None)
         deltas, closs = client_deltas(params, x, y, batch_idx, keys, lr, mu,
                                       engine.fcfg, engine.loss,
-                                      engine.transform, engine.cell_impl)
+                                      engine.transform, engine.cell_impl,
+                                      engine.secure, rk,
+                                      jnp.asarray(base_w))
     deltas = jax.device_get(deltas)
     closs = np.asarray(closs)
-    base_w = w_in if engine.weighted else (w_in > 0).astype(np.float32)
     for j, i in enumerate(real):
         ss.pending.append(PendingUpdate(
             delta=_tree_slice(deltas, int(i)), weight=float(base_w[i]),
             loss=float(closs[i]), dispatch_round=round_idx,
             finish_time=float(finish[j])))
+    ss.cohort_sizes[round_idx] = len(real)
 
     arrived = [p for p in ss.pending if p.finish_time <= new_clock]
-    ss.pending = [p for p in ss.pending if p.finish_time > new_clock]
+    if acfg.cohort_atomic:
+        # secure aggregation: a cohort's pairwise masks cancel only over
+        # the COMPLETE dispatch set, so updates fold only when every member
+        # of their dispatch round has arrived — the whole cohort then folds
+        # as one group with one shared staleness tau (one shared discount,
+        # which scales every member's mask equally).
+        got = {}
+        for p in arrived:
+            got[p.dispatch_round] = got.get(p.dispatch_round, 0) + 1
+        complete = {r for r, n in got.items()
+                    if n == ss.cohort_sizes.get(r)}
+        arrived = [p for p in arrived if p.dispatch_round in complete]
+        if not arrived:
+            # no complete cohort at this flush clock: advance time, keep
+            # everything buffered, skip the server step entirely
+            ss.clock = new_clock
+            ss.empty_flushes += 1
+            return params, state, jnp.asarray(float("nan"))
+        # a complete cohort means EVERY member arrived, so dropping by
+        # dispatch round removes exactly the folded updates
+        ss.pending = [p for p in ss.pending
+                      if p.dispatch_round not in complete]
+        for r in complete:
+            ss.cohort_sizes.pop(r, None)
+    else:
+        ss.pending = [p for p in ss.pending if p.finish_time > new_clock]
     ss.clock = new_clock
 
     tau = np.asarray([round_idx - p.dispatch_round for p in arrived])

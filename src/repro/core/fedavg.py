@@ -57,10 +57,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import (AggregationConfig, FLConfig, ForecasterConfig,
-                                TransformConfig)
+                                SecureAggConfig, TransformConfig)
 from repro.core import aggregation as aggregation_mod
 from repro.core import clustering, losses as losses_mod
+from repro.core import privacy as privacy_mod
 from repro.core import sampling as sampling_mod
+from repro.core import secure_agg as secure_agg_mod
 from repro.core import server_opt as server_opt_mod
 from repro.core import transforms as transforms_mod
 from repro.core.client import local_update
@@ -195,9 +197,39 @@ def make_sharded_engine_round(mesh, cfg: ForecasterConfig, loss: Callable,
 
 
 # ------------------------------------------------------- pipeline execution
+def apply_stack(stack, deltas, keys, *, slots=None, w_full=None,
+                round_key=None):
+    """Transform a client-stacked delta tree through ``stack`` (vmapped).
+
+    Cohort-aware stacks (secure aggregation) additionally thread each
+    client its :class:`~repro.core.secure_agg.CohortContext`: its GLOBAL
+    dispatch slot, the cohort's full weight vector, and the shared round
+    key.  On the vmap path ``slots``/``w_full`` default to the local view
+    (which IS the cohort); shard_map callers must pass the global ones.
+    """
+    if not stack.needs_cohort:
+        return jax.vmap(stack)(deltas, keys)
+    if round_key is None:
+        raise ValueError("cohort-aware transform stack needs the shared "
+                         "round_key (engine.base_round_key)")
+    if w_full is None:
+        raise ValueError("cohort-aware transform stack needs the cohort "
+                         "weight vector w_full")
+    if slots is None:
+        slots = jnp.arange(w_full.shape[0])
+
+    def one(delta, key, slot):
+        ctx = secure_agg_mod.CohortContext(slot, w_full, round_key)
+        return stack(delta, key, ctx)
+
+    return jax.vmap(one)(deltas, keys, slots)
+
+
 def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
                    cfg: ForecasterConfig, loss: Callable, cell_impl: str,
-                   tcfg: TransformConfig, agg: "aggregation_mod.Aggregator"):
+                   tcfg: TransformConfig, agg: "aggregation_mod.Aggregator",
+                   scfg: Optional[SecureAggConfig] = None, round_key=None,
+                   slots=None, w_full=None):
     """Shared local-update -> transform -> aggregate stages of one round.
 
     Runs inside vmap (``agg = LocalAggregator``) or inside the shard_map body
@@ -206,19 +238,25 @@ def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
     transform stack the raw local models are aggregated through exactly the
     legacy ops (bit-identical to the pre-pipeline engine); with transforms
     the per-client deltas are transformed BEFORE the collective and the
-    aggregate is rebuilt as ``w_global + avg(transformed deltas)``.
+    aggregate is rebuilt as ``w_global + avg(transformed deltas)``.  With
+    secure aggregation the stack is cohort-aware: the extra
+    ``round_key`` / ``slots`` / ``w_full`` args feed the pairwise masker,
+    whose masks cancel in ``agg.reduce`` (a linear sum — the aggregator
+    contract, see ``core/aggregation.py``).
     """
     locals_, client_loss = jax.vmap(
         local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
         params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
-    stack = transforms_mod.make_stack(tcfg)
+    stack = transforms_mod.make_stack(tcfg, scfg)
     if stack.is_identity:
         sums, wsum_local = _weighted_sums(locals_, weights)
         wsum = agg.reduce(wsum_local)
         w_agg = jax.tree.map(lambda s: agg.reduce(s) / wsum, sums)
     else:
         deltas = jax.tree.map(lambda l, g: l - g, locals_, params)
-        deltas = jax.vmap(stack)(deltas, keys)
+        deltas = apply_stack(stack, deltas, keys, slots=slots,
+                             w_full=weights if w_full is None else w_full,
+                             round_key=round_key)
         sums, wsum_local = _weighted_sums(deltas, weights)
         wsum = agg.reduce(wsum_local)
         w_agg = jax.tree.map(lambda g, s: g + agg.reduce(s) / wsum,
@@ -228,27 +266,33 @@ def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "loss", "tcfg", "cell_impl"))
+                   static_argnames=("cfg", "loss", "tcfg", "cell_impl",
+                                    "scfg"))
 def pipeline_round(params, x, y, batch_idx, weights, keys, lr, prox_mu,
                    cfg: ForecasterConfig, loss: Callable,
-                   tcfg: TransformConfig, cell_impl: str = "jnp"):
+                   tcfg: TransformConfig, cell_impl: str = "jnp",
+                   scfg: Optional[SecureAggConfig] = None, round_key=None):
     """Full pipeline round, pseudo-distributed (vmap) execution.
 
     ``keys``: (M, 2) uint32 per-client PRNG keys feeding the transform stack
-    (unused — and traced away — when the stack is the identity).  Returns
+    (unused — and traced away — when the stack is the identity).  With
+    secure aggregation (``scfg.enabled``) the shared ``round_key`` seeds the
+    pairwise masks; slots and cohort weights are the local view.  Returns
     ``(w_agg, weighted mean client loss)``; the server stage is applied by
     the caller (``RoundEngine.step``).
     """
     return _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu,
                           cfg=cfg, loss=loss, cell_impl=cell_impl, tcfg=tcfg,
-                          agg=aggregation_mod.LocalAggregator())
+                          agg=aggregation_mod.LocalAggregator(), scfg=scfg,
+                          round_key=round_key)
 
 
 @functools.lru_cache(maxsize=None)
 def make_pipeline_round(mesh, cfg: ForecasterConfig, loss: Callable,
                         tcfg: TransformConfig = TransformConfig(),
                         acfg: AggregationConfig = AggregationConfig(),
-                        cell_impl: str = "jnp"):
+                        cell_impl: str = "jnp",
+                        scfg: Optional[SecureAggConfig] = None):
     """Mesh-sharded pipeline round for any aggregation topology.
 
     The aggregator supplies both the input layout (flat: clients on a 1-D
@@ -259,18 +303,41 @@ def make_pipeline_round(mesh, cfg: ForecasterConfig, loss: Callable,
     reuses one jitted round.
 
     ``round_fn(params, x, y, batch_idx, weights, keys, lr, prox_mu)``.
+    With secure aggregation the signature grows the cohort context —
+    ``round_fn(params, x, y, batch_idx, weights, keys, slots, w_full,
+    round_key, lr, prox_mu)`` — where ``slots`` (global dispatch slot ids)
+    shards alongside the client data and ``w_full``/``round_key`` are
+    replicated: each shard's clients mask against the WHOLE cohort, and the
+    masks cancel in the cross-shard reduction.
     """
     agg = aggregation_mod.make_aggregator(acfg, mesh)
     pspec = agg.pspec()
+    secure_on = scfg is not None and scfg.enabled
 
-    def round_body(params, x, y, batch_idx, weights, keys, lr, prox_mu):
+    if not secure_on:
+        def round_body(params, x, y, batch_idx, weights, keys, lr, prox_mu):
+            return _pipeline_body(params, x, y, batch_idx, weights, keys, lr,
+                                  prox_mu, cfg=cfg, loss=loss,
+                                  cell_impl=cell_impl, tcfg=tcfg, agg=agg)
+
+        return jax.jit(shard_map(
+            round_body, mesh=mesh,
+            in_specs=(P(), pspec, pspec, pspec, pspec, pspec, P(), P()),
+            out_specs=(P(), P()),
+            check_vma=False))
+
+    def secure_body(params, x, y, batch_idx, weights, keys, slots, w_full,
+                    round_key, lr, prox_mu):
         return _pipeline_body(params, x, y, batch_idx, weights, keys, lr,
                               prox_mu, cfg=cfg, loss=loss,
-                              cell_impl=cell_impl, tcfg=tcfg, agg=agg)
+                              cell_impl=cell_impl, tcfg=tcfg, agg=agg,
+                              scfg=scfg, round_key=round_key, slots=slots,
+                              w_full=w_full)
 
     return jax.jit(shard_map(
-        round_body, mesh=mesh,
-        in_specs=(P(), pspec, pspec, pspec, pspec, pspec, P(), P()),
+        secure_body, mesh=mesh,
+        in_specs=(P(), pspec, pspec, pspec, pspec, pspec, pspec, P(), P(),
+                  P(), P()),
         out_specs=(P(), P()),
         check_vma=False))
 
@@ -309,6 +376,9 @@ class RoundEngine:
         self.prox_mu = ccfg.prox_mu if flcfg.server_opt == "fedprox" else 0.0
         self.weighted = server_opt_mod.uses_weighted_aggregation(flcfg)
         self.transform = flcfg.transform
+        # secure aggregation (pairwise masking) + privacy accounting
+        self.secure = flcfg.secure if flcfg.secure.enabled else None
+        self.accountant: Optional[privacy_mod.PrivacyAccountant] = None
         if mesh is None:
             if flcfg.aggregation_config.kind != "flat":
                 raise ValueError(
@@ -319,16 +389,19 @@ class RoundEngine:
         else:
             self._sharded = make_pipeline_round(
                 mesh, fcfg, self.loss, self.transform,
-                flcfg.aggregation_config, cell_impl=cell_impl)
+                flcfg.aggregation_config, cell_impl=cell_impl,
+                scfg=self.secure)
         # ---- round pacing (sync vs semi-sync buffered) -------------------
         # the latency model is host-side only: under mode="sync" it just
         # tracks a simulated wall clock and never touches the round math
         from repro.core import async_engine, latency as latency_mod
         self.async_cfg = flcfg.async_config
+        # float pairwise masks destroy the int8 wire format (ring masking is
+        # future work — ROADMAP), so masked uploads are charged fp32 bytes
+        wire_bits = 0 if self.secure is not None else flcfg.quantize_bits
         self.latency = latency_mod.LatencyModel(
             self.async_cfg.latency, flcfg.seed,
-            latency_mod.payload_bytes(fcfg.num_params(),
-                                      flcfg.quantize_bits))
+            latency_mod.payload_bytes(fcfg.num_params(), wire_bits))
         self.async_state = async_engine.SemiSyncState()
         self._client_fn = None
         if self.async_cfg.mode == "semi_sync":
@@ -345,7 +418,8 @@ class RoundEngine:
             if mesh is not None:
                 self._client_fn = async_engine.make_sharded_client_deltas(
                     mesh, fcfg, self.loss, flcfg.transform,
-                    flcfg.aggregation_config, cell_impl=cell_impl)
+                    flcfg.aggregation_config, cell_impl=cell_impl,
+                    scfg=self.secure)
         else:
             self.buffer_k = 0
 
@@ -378,6 +452,15 @@ class RoundEngine:
         """Pick this round's m participants (``FLConfig.sampling``)."""
         return self.sampler(rng, np.asarray(members), m, round_idx, weights)
 
+    def base_round_key(self, round_idx: int, stream: int = 0):
+        """The dispatch cohort's SHARED round key: every member can derive
+        it (in a real deployment, from the round's key-agreement), and the
+        pairwise secure-agg masks are a pure function of it + the slot
+        pair, so clients need no pairwise communication to agree on masks.
+        """
+        rk = jax.random.fold_in(jax.random.PRNGKey(self.flcfg.seed), stream)
+        return jax.random.fold_in(rk, round_idx)
+
     def round_keys(self, round_idx: int, m: int, stream: int = 0):
         """Per-client transform keys for one round: deterministic in
         (``FLConfig.seed``, ``stream``, round index, selection slot), so DP
@@ -388,9 +471,19 @@ class RoundEngine:
         slot-i clients would draw the SAME Gaussian noise, and the
         difference of their released aggregates would cancel the DP noise.
         """
-        rk = jax.random.fold_in(jax.random.PRNGKey(self.flcfg.seed), stream)
-        rk = jax.random.fold_in(rk, round_idx)
+        rk = self.base_round_key(round_idx, stream)
         return jax.vmap(jax.random.fold_in, (None, 0))(rk, jnp.arange(m))
+
+    def attach_accountant(self, n_members: int, dispatch_m: int) -> None:
+        """(Re)bind the (eps, delta) accountant for one training run:
+        sampling rate ``q = dispatch_m / n_members`` (the over-selected
+        dispatch size under semi-sync — those clients' data is used).
+        Called by the driver per cluster; ``engine.step`` composes one
+        mechanism invocation per dispatch/flush.
+        """
+        q = min(1.0, dispatch_m / max(n_members, 1))
+        self.accountant = privacy_mod.make_accountant(
+            self.transform, self.flcfg.privacy, q)
 
     def step(self, params, state, x, y, batch_idx, weights,
              round_idx: int = 0, stream: int = 0):
@@ -408,6 +501,10 @@ class RoundEngine:
         ``semi_sync`` routes through the staleness-weighted buffered server
         (``core/async_engine.py``), where M is the over-selected ``m'``.
         """
+        if self.accountant is not None:
+            # one dispatch = one subsampled-Gaussian invocation (each
+            # semi-sync step dispatches one cohort and flushes once)
+            self.accountant.step()
         if self.async_cfg.mode == "semi_sync":
             from repro.core import async_engine
             return async_engine.semi_sync_step(
@@ -433,14 +530,24 @@ class RoundEngine:
             w = (w > 0).astype(jnp.float32)
         lr = jnp.float32(self.flcfg.lr)
         mu = jnp.float32(self.prox_mu)
-        keys = self.round_keys(round_idx, x.shape[0], stream)
+        m = x.shape[0]
+        keys = self.round_keys(round_idx, m, stream)
+        rk = (self.base_round_key(round_idx, stream)
+              if self.secure is not None else None)
         if self._sharded is not None:
-            w_agg, loss = self._sharded(params, x, y, batch_idx, w, keys,
-                                        lr, mu)
+            if self.secure is not None:
+                # slots shard with the clients; the cohort weight vector and
+                # round key replicate so every shard masks vs the whole set
+                w_agg, loss = self._sharded(params, x, y, batch_idx, w, keys,
+                                            jnp.arange(m), w, rk, lr, mu)
+            else:
+                w_agg, loss = self._sharded(params, x, y, batch_idx, w, keys,
+                                            lr, mu)
         else:
             w_agg, loss = pipeline_round(params, x, y, batch_idx, w, keys,
                                          lr, mu, self.fcfg, self.loss,
-                                         self.transform, self.cell_impl)
+                                         self.transform, self.cell_impl,
+                                         self.secure, rk)
         params, state = server_opt_mod.server_update(params, w_agg, state,
                                                      self.flcfg.server)
         return params, state, loss
@@ -456,6 +563,11 @@ class FLResult:
     heldout_clients: Optional[np.ndarray] = None
     sim_times: Optional[np.ndarray] = None  # (T,) simulated seconds at each
     #                                       # round's end (latency model)
+    eps_history: Optional[np.ndarray] = None  # (T,) running accountant eps
+    #                                       # after each round (inf when the
+    #                                       # accountant is disabled)
+    privacy: Optional[Dict] = None          # final accountant report
+    #                                       # (core/privacy.py::report)
 
 
 def time_to_target(res: FLResult, target: float) -> float:
@@ -464,6 +576,15 @@ def time_to_target(res: FLResult, target: float) -> float:
     Returns ``nan`` when the run never got there (e.g. diverged)."""
     hit = np.flatnonzero(res.loss_history <= target)
     return float(res.sim_times[hit[0]]) if len(hit) else float("nan")
+
+
+def final_loss(res: FLResult) -> float:
+    """Last FINITE entry of the loss history — under cohort-atomic
+    semi-sync pacing (secure aggregation) a flush that completes no cohort
+    records ``nan``, so drivers comparing pacing modes must anchor their
+    common target here, not at ``loss_history[-1]``."""
+    finite = res.loss_history[np.isfinite(res.loss_history)]
+    return float(finite[-1]) if len(finite) else float("nan")
 
 
 def _seed_rngs(seed: int):
@@ -547,10 +668,13 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         key = jax.random.PRNGKey(flcfg.seed + (cid if cid >= 0 else 0))
         params, sstate = engine.init(key)
         engine.reset_pacing()          # per-cluster event clock + buffer
-        hist, sim_hist = [], []
+        hist, sim_hist, eps_hist = [], [], []
         m = min(flcfg.clients_per_round, len(members))
         # semi-sync over-selects m' >= m; sync dispatches exactly m
         m_sel = engine.dispatch_m(m, len(members))
+        # (eps, delta) accounting for THIS cluster's mechanism: sampling
+        # rate = dispatch size / cluster membership, stepped per flush
+        engine.attach_accountant(len(members), m_sel)
         if (engine.async_cfg.mode == "semi_sync"
                 and engine.async_cfg.buffer_k >= m_sel > 0
                 and engine.async_cfg.buffer_k):
@@ -578,13 +702,18 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
                 stream=cid if cid >= 0 else 0)
             hist.append(float(l))
             sim_hist.append(engine.sim_time)
+            eps_hist.append(engine.accountant.epsilon())
             if log_every and (t + 1) % log_every == 0:
+                eps = eps_hist[-1]
+                eps_s = f" eps {eps:.2f}" if np.isfinite(eps) else ""
                 print(f"[cluster {cid}] round {t+1}/{flcfg.rounds} "
-                      f"loss {hist[-1]:.5f} sim_t {sim_hist[-1]:.1f}s")
+                      f"loss {hist[-1]:.5f} sim_t {sim_hist[-1]:.1f}s{eps_s}")
         results[cid] = FLResult(jax.device_get(params), np.array(hist),
                                 cents, assigns,
                                 held_ids if len(held_ids) else None,
-                                sim_times=np.array(sim_hist))
+                                sim_times=np.array(sim_hist),
+                                eps_history=np.array(eps_hist),
+                                privacy=engine.accountant.report())
     return results
 
 

@@ -18,6 +18,31 @@ draw (deterministic / lognormal / heavy-tail).  Draws are a pure function
 of ``(seed, round, slot)`` — no shared rng state — so a simulated schedule
 replays bit-exactly under a fixed seed.
 
+**Calibration of the default constants** (``LatencyConfig``), anchored to
+the paper's measured 70-100 s Pi-4B rounds (§5.5):
+
+``compute_s_per_window_epoch = 3.2e-3``
+    The paper's clients hold one year of 15-min smart-meter readings:
+    365 x 96 = 35,040 samples.  After the 75:25 chronological train split
+    and lookback-8/horizon-4 windowing, that is ~26,270 training windows
+    per client-epoch.  A measured round (local training dominates on the
+    Pi 4B) of 70-100 s therefore brackets the per-window-epoch cost at
+    70/26,270 .. 100/26,270 = 2.7 .. 3.8 ms; the default 3.2 ms puts a
+    jitter-free E=1 full-year round at 26,270 x 3.2e-3 ~= 84 s — the
+    middle of the measured band.
+``uplink_bytes_per_s = 1e6``
+    The ~140k-param LSTM upload is 561 KB in fp32 (140 KB int8-quantized).
+    At 1 MB/s — a deliberately conservative shared-WiFi/constrained edge
+    uplink, NOT the Pi 4B's gigabit NIC — upload adds ~0.6 s, consistent
+    with the paper's compute-dominated rounds while still letting the
+    quantize transform show a visible wire win at scale.
+``jitter = 0.5``
+    A moderate default spread; §5.5's own 70-100 s spread across identical
+    Pi 4Bs corresponds to a lognormal sigma of roughly
+    ln(100/84) ~= 0.17-0.5 depending on how much of the spread is per-round
+    vs per-device — benchmarks that study stragglers pass their own value
+    explicitly.
+
 ``link_budget`` models the hierarchical per-level wire cost (region fan-in
 vs cloud ingress) for ``bench_edge`` — the ROADMAP follow-up to PR 3's
 edge->region->cloud aggregation.
@@ -40,7 +65,10 @@ _LATENCY_STREAM = 0x1A7E
 def payload_bytes(n_params: int, quantize_bits: int = 0) -> float:
     """Uplink payload of one client update: fp32, or ``quantize_bits``-bit
     ints when the quantize transform is on (per-leaf scale overhead is a few
-    floats on a ~140k-param model — ignored)."""
+    floats on a ~140k-param model — ignored).  Callers must pass
+    ``quantize_bits=0`` when secure-agg masking is on: the float pairwise
+    masks destroy the int8 wire format, so the masked upload is fp32
+    regardless of the quantize stage (``RoundEngine`` does this)."""
     if quantize_bits:
         return math.ceil(n_params * quantize_bits / 8)
     return n_params * 4.0

@@ -1,0 +1,211 @@
+"""(epsilon, delta) accounting for the federated DP pipeline
+(``PrivacyConfig``; see docs/privacy.md).
+
+Each federated round with the DP transform stack on releases, for every
+selected client, a clipped delta (L2 sensitivity ``C = clip_norm``) plus
+per-coordinate Gaussian noise ``N(0, (z*C)^2)`` (``z = noise_multiplier``).
+From the honest-but-curious server's point of view this is one invocation
+of the **subsampled Gaussian mechanism**: a client participates in a round
+with probability ``q ~= m/N`` (the dispatch fraction) and, when selected,
+its contribution is released through a Gaussian mechanism with noise
+multiplier ``z``.  Composing ``T`` rounds is done in Renyi-DP space
+(Mironov 2017; Mironov/Talwar/Zhang 2019 for the sampled Gaussian):
+
+* per-round RDP at integer order ``a``:
+
+      q = 1:  RDP(a) = a / (2 z^2)
+      q < 1:  RDP(a) = (1/(a-1)) * log( sum_{k=0}^{a}
+                  C(a,k) (1-q)^(a-k) q^k exp(k(k-1) / (2 z^2)) )
+
+  (the exact binomial expansion for integer orders, evaluated in log space
+  with ``lgamma`` so large orders cannot overflow);
+* RDP composes ADDITIVELY across rounds — ``T`` rounds cost ``T * RDP(a)``;
+* conversion to ``(epsilon, delta)`` uses the improved bound
+  (Canonne-Kamath-Steinke 2020, as in Opacus/TF-Privacy):
+
+      eps(a) = T*RDP(a) + log1p(-1/a) - (log(delta) + log(a)) / (a - 1)
+
+  minimized over the order grid.
+
+Honesty notes (also in docs/privacy.md):
+
+* Accounting needs a bounded sensitivity AND noise: with ``clip_norm == 0``
+  or ``noise_multiplier == 0`` the accountant is *disabled* and reports
+  ``epsilon = inf`` rather than a vacuous number.
+* We account the server's per-client view with multiplier ``z`` — each
+  client's delta is individually noised, so the release of the whole round
+  is a Gaussian mechanism of multiplier ``z`` per contribution.  With
+  secure aggregation the server only sees the SUM (noise std ``z*C*sqrt(m)``
+  on sensitivity ``C``), so ``z`` remains a valid — now conservative —
+  bound.
+* Selection is fixed-size sampling without replacement; the bound assumes
+  Poisson sampling at the same expected rate, the standard approximation in
+  DP-FedAvg implementations.
+
+The accountant is stepped once per FLUSH by the round engine (one dispatch
+= one mechanism invocation; in semi-sync pacing each ``RoundEngine.step``
+call dispatches one cohort and flushes once, so the composition count is
+the number of dispatched rounds either way) and surfaced as
+``FLResult.eps_history`` / ``FLResult.privacy``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import PrivacyConfig, TransformConfig
+
+# Integer RDP orders: dense where the subsampled-Gaussian optimum usually
+# lands, sparse tail for tiny q / huge T.
+DEFAULT_ORDERS: Tuple[int, ...] = tuple(range(2, 65)) + (96, 128, 256, 512)
+
+
+def _log_comb(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1)
+            - math.lgamma(n - k + 1))
+
+
+def rdp_sampled_gaussian(q: float, noise_multiplier: float,
+                         order: int) -> float:
+    """Renyi DP of ONE subsampled Gaussian release at an integer order.
+
+    ``q``: sampling rate in (0, 1]; ``noise_multiplier``: z = sigma / C;
+    ``order``: integer Renyi order >= 2.  Evaluated with the exact integer-
+    order binomial expansion in log space.
+    """
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"sampling rate q must be in (0, 1], got {q}")
+    if noise_multiplier <= 0.0:
+        return math.inf
+    if order < 2 or order != int(order):
+        raise ValueError(f"order must be an integer >= 2, got {order}")
+    a, z = int(order), float(noise_multiplier)
+    if q == 1.0:
+        return a / (2.0 * z * z)
+    log_terms = [
+        _log_comb(a, k)
+        + (a - k) * math.log1p(-q)
+        + (k * math.log(q) if k else 0.0)
+        + k * (k - 1) / (2.0 * z * z)
+        for k in range(a + 1)
+    ]
+    m = max(log_terms)
+    log_sum = m + math.log(sum(math.exp(t - m) for t in log_terms))
+    return log_sum / (a - 1)
+
+
+def eps_from_rdp(rdp: Sequence[float], orders: Sequence[int],
+                 delta: float) -> float:
+    """Best (smallest) epsilon over the order grid at target ``delta``,
+    via the improved RDP -> (eps, delta) conversion (CKS 2020)."""
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    best = math.inf
+    for r, a in zip(rdp, orders):
+        if not math.isfinite(r):
+            continue
+        eps = (r + math.log1p(-1.0 / a)
+               - (math.log(delta) + math.log(a)) / (a - 1))
+        best = min(best, eps)
+    return max(best, 0.0)
+
+
+class PrivacyAccountant:
+    """Running (epsilon, delta) over composed rounds of the subsampled
+    Gaussian mechanism.
+
+    Per-order per-round RDP is precomputed once; ``step`` is O(1) and
+    ``epsilon`` is O(|orders|), so per-round surfacing costs nothing.
+    ``active`` is False when the mechanism certifies nothing (no noise, or
+    unbounded sensitivity) — then ``epsilon`` is ``inf``, ``step`` still
+    counts rounds, and ``report`` says why.
+    """
+
+    def __init__(self, noise_multiplier: float, sample_rate: float,
+                 delta: float = 1e-5,
+                 orders: Sequence[int] = DEFAULT_ORDERS,
+                 disabled_reason: Optional[str] = None):
+        self.noise_multiplier = float(noise_multiplier)
+        self.sample_rate = float(sample_rate)
+        self.delta = float(delta)
+        self.orders = tuple(int(o) for o in orders)
+        self.rounds = 0
+        self.active = (disabled_reason is None and noise_multiplier > 0.0)
+        self.disabled_reason = disabled_reason if not self.active else None
+        if self.active:
+            self._rdp_per_round = np.asarray(
+                [rdp_sampled_gaussian(self.sample_rate,
+                                      self.noise_multiplier, a)
+                 for a in self.orders])
+        else:
+            if self.disabled_reason is None:
+                self.disabled_reason = "noise_multiplier is 0"
+            self._rdp_per_round = np.full(len(self.orders), math.inf)
+
+    def step(self, n: int = 1) -> None:
+        """Compose ``n`` further rounds (one per dispatch/flush)."""
+        self.rounds += int(n)
+
+    @property
+    def total_rdp(self) -> np.ndarray:
+        """Composed RDP per order after ``rounds`` rounds."""
+        return self.rounds * self._rdp_per_round
+
+    def epsilon(self) -> float:
+        """Current epsilon at the target delta: 0 before any round has
+        composed, ``inf`` when the accountant is disabled."""
+        if not self.active:
+            return math.inf
+        if self.rounds == 0:
+            return 0.0
+        return eps_from_rdp(self.total_rdp, self.orders, self.delta)
+
+    def report(self) -> Dict[str, float]:
+        """One-line-able summary for drivers / FLResult.privacy."""
+        return {
+            "enabled": self.active,
+            "epsilon": self.epsilon(),
+            "delta": self.delta,
+            "rounds": self.rounds,
+            "noise_multiplier": self.noise_multiplier,
+            "sample_rate": self.sample_rate,
+            **({"disabled_reason": self.disabled_reason}
+               if not self.active else {}),
+        }
+
+
+def make_accountant(tcfg: TransformConfig, pcfg: PrivacyConfig,
+                    sample_rate: float) -> PrivacyAccountant:
+    """Accountant for one training run: the PR 3 clip + noise knobs define
+    the per-round mechanism, ``sample_rate ~= dispatch_m / n_members`` its
+    subsampling.  Noise without a clip bound (or no noise at all) yields a
+    DISABLED accountant that reports ``epsilon = inf`` with the reason,
+    instead of certifying something the mechanism does not provide.
+    """
+    q = min(max(float(sample_rate), 0.0), 1.0)
+    orders = pcfg.orders or DEFAULT_ORDERS
+    if tcfg.noise_multiplier <= 0.0:
+        return PrivacyAccountant(0.0, q, pcfg.delta, orders,
+                                 disabled_reason="dp_noise is 0 (no "
+                                                 "Gaussian mechanism)")
+    if tcfg.clip_norm <= 0.0:
+        return PrivacyAccountant(0.0, q, pcfg.delta, orders,
+                                 disabled_reason="dp_clip is 0 (unbounded "
+                                                 "sensitivity)")
+    if q <= 0.0:
+        return PrivacyAccountant(0.0, q, pcfg.delta, orders,
+                                 disabled_reason="sampling rate is 0")
+    return PrivacyAccountant(tcfg.noise_multiplier, q, pcfg.delta, orders)
+
+
+def format_report(report: Dict[str, float]) -> str:
+    """Human-readable accountant line for the drivers/bench."""
+    if not report["enabled"]:
+        return (f"privacy: accounting disabled — {report['disabled_reason']}"
+                " (set --dp-clip and --dp-noise to certify a guarantee)")
+    return (f"privacy: (eps={report['epsilon']:.2f}, "
+            f"delta={report['delta']:.0e}) after {report['rounds']} rounds "
+            f"(z={report['noise_multiplier']}, "
+            f"q={report['sample_rate']:.3g})")

@@ -1,0 +1,152 @@
+"""Secure aggregation via pairwise masking (``SecureAggConfig``).
+
+The paper's privacy pitch is that raw consumption traces never leave the
+edge — but through PR 4 the cloud still saw every individual client DELTA in
+the clear (clipped/noised/quantized, yet per-client).  This module closes
+that gap with the classic pairwise-masking construction (Bonawitz et al.,
+"Practical Secure Aggregation"; see PAPERS.md): every pair of clients
+``(i, j)`` in a dispatch cohort derives a SHARED mask from the cohort's
+round key, client ``min(i,j)`` adds it and client ``max(i,j)`` subtracts it,
+so each upload is individually high-variance noise while the masks cancel
+exactly in the aggregator's sum:
+
+    y_i = T(delta_i) + (1/w_i) * sum_{j != i} sign(i,j) * PRG(key_{ij})
+    sum_i w_i * y_i = sum_i w_i * T(delta_i)        (masks cancel)
+
+Key points of this implementation:
+
+* **A cohort-aware ``DeltaTransform``.**  :class:`PairwiseMasker` registers
+  at the END of the transform stack (clip -> noise -> quantize -> mask; see
+  ``transforms.make_stack``) with its own stable PRNG tag.  Unlike the
+  per-client transforms it needs cohort context — its own dispatch slot, the
+  cohort's aggregation-weight vector, and the shared round key — passed as a
+  :class:`CohortContext` by the stack.
+* **Masks cancel in the WEIGHTED sum.**  The aggregate is
+  ``sum_i w_i * T(delta_i) / sum_i w_i``, so raw antisymmetric masks would
+  NOT cancel under unequal weights.  Each client therefore scales its total
+  mask by ``1/w_i`` (its own weight — the sample count the server already
+  knows for weighted FedAvg), making the post-weighting mask contribution
+  ``+mask_ij - mask_ij`` per pair.  Cancellation is exact up to float
+  rounding (two roundings per pair term), which is why the masked == clear
+  pins are float-tolerance, not bitwise.  Consequently ``mask_std`` is the
+  mask scale on the client's *weighted* contribution ``w_i * y_i`` (the
+  quantity the server actually sums); the raw upload ``y_i`` carries
+  ``mask_std * sqrt(cohort-1) / w_i`` — under count-weighted aggregation,
+  size ``mask_std`` relative to ``w * ||delta||``, not ``||delta||``.
+  Under uniform aggregation (weights 0/1) the two coincide.
+* **Weight-0 pads are excluded.**  Mesh-divisibility pads enter the round
+  with weight 0, so their (weighted) uploads vanish from the sum — a mask
+  shared with a pad could never cancel.  Pair masks are gated on BOTH
+  endpoints having ``w > 0``, so the mask cohort is exactly the real
+  dispatch set.
+* **Topology-independent.**  Mask generation is a pure function of
+  ``(round key, slot pair)`` — no client-to-client communication — so each
+  client computes its masks locally inside the vmap/shard_map round body and
+  cancellation holds under the flat one-psum, the hierarchical
+  edge->region->cloud psum pair, and the vmap path alike (the reduction is
+  linear; see ``core/aggregation.py``).
+* **Semi-sync cohorts.**  Masks are keyed by the DISPATCH round, so a
+  cohort's masks cancel only when the whole cohort folds together; enabling
+  secure aggregation forces ``AsyncConfig.cohort_atomic`` folds
+  (``core/async_engine.py``), under which a late cohort folds as one group
+  with one shared staleness discount — the discount scales every member's
+  mask equally, preserving cancellation.
+
+Simulation caveat (see docs/privacy.md): real deployments mask in a finite
+integer ring (mod ``2^b``) where the masked value is information-
+theoretically uniform; we simulate additive masking in float32, which
+demonstrates the cancellation algebra and its cost, not bit-level secrecy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SecureAggConfig
+
+PyTree = Any
+
+# domain-separation tag folded into the shared round key before the pair
+# indices: pair keys can never collide with the per-client transform keys
+# (which fold slot indices < m directly into the round key)
+_PAIR_DOMAIN = 0x5EC0A6
+
+
+class CohortContext(NamedTuple):
+    """Per-client view of the dispatch cohort, threaded to cohort-aware
+    transforms by ``TransformStack``.
+
+    ``slot``: this client's GLOBAL dispatch slot (scalar int32 — under
+    shard_map the body only sees its local shard, so slots are passed in
+    sharded alongside the client data).  ``weights``: the full (M,)
+    aggregation-weight vector of the cohort (replicated across shards;
+    weights are public — the server needs them to aggregate).  ``round_key``:
+    the cohort's shared PRNG key (``RoundEngine.base_round_key``), identical
+    for every member.
+    """
+    slot: jax.Array
+    weights: jax.Array
+    round_key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PairwiseMasker:
+    """Cohort-aware ``DeltaTransform``: add the antisymmetric pairwise masks.
+
+    For client ``i`` the total mask is ``sum_{j != i} sign(i,j) * mask_std *
+    N(key_{ij})`` with ``key_{ij}`` derived from (round key, min(i,j),
+    max(i,j)) — both endpoints derive the SAME draw and opposite signs.
+    Pairs are gated on both endpoints being real (``w > 0``), and the total
+    is scaled by ``1/w_i`` so the masks cancel in the weighted aggregator
+    sum (see module docstring).  Memory is O(params) per client: masks
+    accumulate over cohort slots via ``lax.scan``, never materializing the
+    (M, params) mask set.
+    """
+    mask_std: float = 1.0
+    tag: ClassVar[int] = 3             # stable PRNG stream id (stack slot)
+    needs_cohort: ClassVar[bool] = True
+
+    def __call__(self, delta: PyTree, key: jax.Array,
+                 ctx: CohortContext) -> PyTree:
+        del key                        # masks come from the SHARED round key
+        w = ctx.weights
+        i = ctx.slot
+        base = jax.random.fold_in(ctx.round_key, _PAIR_DOMAIN)
+        leaves, treedef = jax.tree.flatten(delta)
+
+        def add_pair(acc, j):
+            lo, hi = jnp.minimum(i, j), jnp.maximum(i, j)
+            pair_key = jax.random.fold_in(jax.random.fold_in(base, lo), hi)
+            sign = jnp.where(i < j, 1.0, -1.0)
+            gate = ((w[i] > 0) & (w[j] > 0) & (j != i))
+            coef = (sign * gate * self.mask_std).astype(jnp.float32)
+            ks = jax.random.split(pair_key, len(leaves))
+            acc = [a + coef * jax.random.normal(k, a.shape, a.dtype)
+                   for a, k in zip(acc, ks)]
+            return acc, None
+
+        zeros = [jnp.zeros_like(x) for x in leaves]
+        masks, _ = jax.lax.scan(add_pair, zeros, jnp.arange(w.shape[0]))
+        # scale by 1/w_i so the weighted sum sees the raw antisymmetric
+        # masks.  Weight-0 pads are CYCLED DUPLICATES of real clients
+        # (fedavg mesh-divisibility padding): they can't join the mask
+        # cohort (their masks would never cancel), so their upload must be
+        # ZEROED, not sent in the clear — a pad slot leaking its
+        # duplicate's delta unmasked would hand the server exactly the
+        # per-client view masking exists to prevent.  Their weight is 0,
+        # so the aggregate is unchanged.
+        real_i = (w[i] > 0).astype(jnp.float32)
+        inv_w = jnp.where(w[i] > 0, 1.0 / jnp.maximum(w[i], 1e-30), 0.0)
+        out = [real_i * (x + mk * inv_w) for x, mk in zip(leaves, masks)]
+        return jax.tree.unflatten(treedef, out)
+
+
+def make_masker(cfg: SecureAggConfig) -> PairwiseMasker:
+    """Build the pairwise-masking stage a ``SecureAggConfig`` asks for."""
+    if not cfg.enabled:
+        raise ValueError("make_masker called with secure aggregation "
+                         "disabled (SecureAggConfig.enabled=False)")
+    return PairwiseMasker(mask_std=cfg.mask_std)

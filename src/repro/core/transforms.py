@@ -28,21 +28,31 @@ Knob -> literature map (see PAPERS.md):
     the wire format (quantize then dequantize) so aggregation math stays in
     float.
 
+``SecureAggConfig.enabled``
+    Pairwise masking (``core/secure_agg.py``): antisymmetric per-pair masks
+    derived from the cohort's shared round key, added LAST in the stack so
+    the upload that crosses the wire is individually noise but the masks
+    cancel in the aggregator sum — actual secure aggregation on top of the
+    DP/compression stack.  It is a *cohort-aware* transform: the stack
+    threads it a :class:`~repro.core.secure_agg.CohortContext` (own slot,
+    cohort weights, shared round key) in addition to the per-client key.
+
 Transforms compose as a :class:`TransformStack` in the fixed order
-clip -> noise -> quantize (sensitivity bound first, privacy second,
-compression last).  The empty stack is the identity and keeps the round
-bit-identical to the pre-transform engine (``core/fedavg.py`` routes identity
-stacks through the legacy aggregation math).
+clip -> noise -> quantize -> mask (sensitivity bound first, privacy second,
+compression third, wire masking last).  The empty stack is the identity and
+keeps the round bit-identical to the pre-transform engine
+(``core/fedavg.py`` routes identity stacks through the legacy aggregation
+math).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, Protocol, Tuple
+from typing import Any, ClassVar, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import TransformConfig
+from repro.configs.base import SecureAggConfig, TransformConfig
 
 PyTree = Any
 
@@ -129,6 +139,11 @@ class TransformStack:
     in the stack — so toggling one stage (e.g. turning ``clip_norm`` off)
     cannot silently shift another stage's random stream: a DP-noise draw is
     the same bits with or without clipping/quantization around it.
+
+    Cohort-aware transforms (``needs_cohort = True``, e.g. the pairwise
+    masker) additionally receive the cohort context — calling a stack that
+    contains one without ``ctx`` raises, so a secure-agg stack can never
+    silently run unmasked.
     """
     transforms: Tuple[DeltaTransform, ...] = ()
 
@@ -136,19 +151,35 @@ class TransformStack:
     def is_identity(self) -> bool:
         return not self.transforms
 
-    def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
+    @property
+    def needs_cohort(self) -> bool:
+        """True when any member transform needs the dispatch-cohort context
+        (slot / weights / shared round key) — see ``core/secure_agg.py``."""
+        return any(getattr(t, "needs_cohort", False) for t in self.transforms)
+
+    def __call__(self, delta: PyTree, key: jax.Array, ctx=None) -> PyTree:
         seen: dict = {}
         for t in self.transforms:
             occ = seen.get(t.tag, 0)   # same-kind repeats get fresh streams
             seen[t.tag] = occ + 1
-            delta = t(delta, jax.random.fold_in(
-                jax.random.fold_in(key, t.tag), occ))
+            sub = jax.random.fold_in(jax.random.fold_in(key, t.tag), occ)
+            if getattr(t, "needs_cohort", False):
+                if ctx is None:
+                    raise ValueError(
+                        f"{type(t).__name__} needs the dispatch-cohort "
+                        "context (slot/weights/round key); call the stack "
+                        "with ctx=CohortContext(...)")
+                delta = t(delta, sub, ctx)
+            else:
+                delta = t(delta, sub)
         return delta
 
 
-def make_stack(cfg: TransformConfig) -> TransformStack:
-    """Build the clip -> noise -> quantize stack selected by a
-    ``TransformConfig`` (the ``FLConfig.transform`` facade view)."""
+def make_stack(cfg: TransformConfig,
+               secure: Optional[SecureAggConfig] = None) -> TransformStack:
+    """Build the clip -> noise -> quantize -> mask stack selected by a
+    ``TransformConfig`` (+ optional ``SecureAggConfig``), the
+    ``FLConfig.transform`` / ``FLConfig.secure`` facade views."""
     ts = []
     if cfg.clip_norm > 0.0:
         ts.append(L2Clip(cfg.clip_norm))
@@ -157,4 +188,7 @@ def make_stack(cfg: TransformConfig) -> TransformStack:
         ts.append(GaussianNoise(cfg.noise_multiplier * sensitivity))
     if cfg.quantize_bits:
         ts.append(StochasticQuantize(cfg.quantize_bits))
+    if secure is not None and secure.enabled:
+        from repro.core import secure_agg  # late: secure_agg is a leaf module
+        ts.append(secure_agg.make_masker(secure))
     return TransformStack(tuple(ts))

@@ -25,11 +25,12 @@ if [ "$#" -eq 0 ]; then
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_scalability.py \
       --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke
-  echo "== bench_scalability smoke (DP + quantize + hierarchical, 1 round)"
+  echo "== bench_scalability smoke (DP + quantize + secure-agg + hierarchical, 1 round)"
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_scalability.py \
       --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke \
-      --dp-clip 1.0 --dp-noise 0.5 --quantize 8 --hier --regions 2
+      --dp-clip 1.0 --dp-noise 0.5 --quantize 8 --hier --regions 2 \
+      --secure-agg
   echo "== bench_scalability smoke (semi-sync buffered rounds, lognormal stragglers)"
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_scalability.py \

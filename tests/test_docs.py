@@ -1,0 +1,70 @@
+"""Docs honesty (ISSUE 5 satellites): the README quickstart snippet is
+EXECUTED (extracted from the markdown, not duplicated) so the documented
+entrypoint cannot rot, and intra-repo markdown links must resolve.  The CI
+docs job runs exactly this file."""
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+README = REPO / "README.md"
+# the user-facing docs whose links CI guarantees (ISSUE/PAPERS/SNIPPETS are
+# internal working notes and may cite external repo paths)
+DOC_FILES = [README, *sorted((REPO / "docs").glob("**/*.md"))]
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def extract_python_snippets(path):
+    return _FENCE.findall(path.read_text())
+
+
+def test_readme_exists_with_quickstart_fence():
+    assert README.exists(), "README.md is a deliverable (ISSUE 5)"
+    assert (REPO / "docs" / "privacy.md").exists()
+    assert extract_python_snippets(README), "README lost its quickstart"
+
+
+def test_readme_quickstart_snippet_runs():
+    """Execute the FIRST ```python fence of the README verbatim.  It must
+    train end-to-end and surface the privacy subsystem it advertises."""
+    snippet = extract_python_snippets(README)[0]
+    ns = {}
+    exec(compile(snippet, str(README), "exec"), ns)   # noqa: S102
+    result = ns["result"]
+    assert np.isfinite(result.loss_history).all()
+    # the snippet turns on clip + noise + secure aggregation: the
+    # accountant must certify a finite epsilon
+    assert result.privacy["enabled"]
+    assert np.isfinite(result.privacy["epsilon"])
+    assert result.privacy["rounds"] == len(result.loss_history)
+    assert np.isfinite(result.eps_history).all()
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_intra_repo_markdown_links_resolve(doc):
+    """Every relative link in the user-facing docs points at a real file
+    (http/mailto/anchors are out of scope)."""
+    missing = []
+    for target in _LINK.findall(doc.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (doc.parent / rel).resolve().exists():
+            missing.append(target)
+    assert not missing, f"{doc.name}: broken intra-repo links {missing}"
+
+
+def test_docs_mention_every_e2e_flag():
+    """The README flag table tracks the actual e2e driver argparse: any
+    flag added to the driver must be documented (and vice versa is caught
+    by the driver rejecting unknown flags)."""
+    driver = (REPO / "examples" / "fl_forecasting_e2e.py").read_text()
+    flags = set(re.findall(r'add_argument\("(--[\w-]+)"', driver))
+    readme = README.read_text()
+    undocumented = {f for f in flags if f"`{f}`" not in readme}
+    assert not undocumented, (
+        f"README flag table is missing {sorted(undocumented)}")

