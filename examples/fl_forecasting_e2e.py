@@ -95,6 +95,23 @@ def main():
                     help="simulated client-latency distribution")
     ap.add_argument("--straggler-jitter", type=float, default=1.0,
                     help="straggler spread (0 = deterministic latency)")
+    ap.add_argument("--dropout-prob", type=float, default=0.0,
+                    help="per-dispatch client dropout probability (semi_sync "
+                         "only): dropped uploads never arrive; the engine "
+                         "re-dispatches after --timeout-rounds and, under "
+                         "--secure-agg, re-keys the surviving cohort")
+    ap.add_argument("--absent-prob", type=float, default=0.0,
+                    help="per-round client unavailability: absent clients "
+                         "are excluded from selection that round")
+    ap.add_argument("--timeout-rounds", type=int, default=2,
+                    help="rounds a dispatched update may stay unarrived "
+                         "before the engine declares it lost")
+    ap.add_argument("--checkpoint", default="",
+                    help="checkpoint path stem: training state is saved as "
+                         "<stem>.clustered.npz / <stem>.global.npz and a "
+                         "killed run resumes bit-identically")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="save the checkpoint every N rounds")
     args = ap.parse_args()
 
     fcfg = ForecasterConfig(cell="lstm", hidden_dim=64)
@@ -137,7 +154,11 @@ def main():
                              else args.buffer_frac),
                 staleness_alpha=args.staleness_alpha,
                 stragglers=args.stragglers,
-                straggler_jitter=args.straggler_jitter)
+                straggler_jitter=args.straggler_jitter,
+                dropout_prob=args.dropout_prob,
+                absent_prob=args.absent_prob,
+                timeout_rounds=args.timeout_rounds)
+    ckpt = dict(checkpoint_every=args.checkpoint_every)
 
     pipe = ""
     if (args.dp_clip or args.dp_noise or args.quantize or args.hier
@@ -152,15 +173,23 @@ def main():
         pipe += (f", semi_sync(over_select={args.over_select}, {thresh}, "
                  f"alpha={args.staleness_alpha}, "
                  f"stragglers={args.stragglers})")
+    if args.dropout_prob or args.absent_prob:
+        pipe += (f", churn(dropout={args.dropout_prob}, "
+                 f"absent={args.absent_prob}, "
+                 f"timeout={args.timeout_rounds}r)")
     print(f"== clustered FL ({args.clients} clients → 4 clusters, "
           f"server_opt={args.server_opt}, sampling={args.sampling}{pipe})")
     res_c = fedavg.run_federated_training(
         train_data, fcfg, FLConfig(**base, n_clusters=4),
-        log_every=args.rounds // 2)
+        log_every=args.rounds // 2,
+        checkpoint_path=(f"{args.checkpoint}.clustered"
+                         if args.checkpoint else None), **ckpt)
     print("== global FL (no clustering)")
     res_g = fedavg.run_federated_training(
         train_data, fcfg, FLConfig(**base, n_clusters=0),
-        log_every=args.rounds // 2)
+        log_every=args.rounds // 2,
+        checkpoint_path=(f"{args.checkpoint}.global"
+                         if args.checkpoint else None), **ckpt)
 
     # privacy: the (eps, delta) accountant composes the per-round clipped +
     # noised release across rounds (core/privacy.py; see docs/privacy.md) —
@@ -179,8 +208,11 @@ def main():
           f"{res_g[-1].sim_times[-1]:.1f}s over {args.rounds} rounds "
           f"({args.stragglers} stragglers)")
     if args.mode == "semi_sync":
+        # the sync baseline blocks on every upload, so dropout would stall
+        # it forever — compare against the dropout-free sync run instead
         res_sync = fedavg.run_federated_training(
-            train_data, fcfg, FLConfig(**{**base, "mode": "sync"},
+            train_data, fcfg, FLConfig(**{**base, "mode": "sync",
+                                          "dropout_prob": 0.0},
                                        n_clusters=0))
         # last FINITE losses: cohort-atomic pacing (--secure-agg) records
         # nan for flushes that complete no cohort

@@ -2,8 +2,20 @@
 
 Flat-key .npz format (no pickle — safe to load), with the tree structure
 recorded as the key paths.  Used by the FL driver for round snapshots and
-by the LLM examples.  bfloat16 leaves are stored via a uint16 view (npz has
+full-engine checkpoint/resume (``fedavg.run_federated_training``) and by
+the LLM examples.  bfloat16 leaves are stored via a uint16 view (npz has
 no native bf16).
+
+Format notes:
+
+* Paths are normalized to carry the ``.npz`` suffix — ``np.savez`` appends
+  it silently, so without normalization ``save("ckpt")`` +
+  ``restore("ckpt")`` would write ``ckpt.npz`` and then fail to find
+  ``ckpt``.
+* Key-paths join with ``/``; two DISTINCT tree paths that join to the same
+  string (e.g. a dict key containing ``/``), or a leaf keyed by the
+  reserved ``__metadata__``, would silently overwrite each other in the
+  archive — both raise ``ValueError`` instead of corrupting the checkpoint.
 """
 from __future__ import annotations
 
@@ -16,46 +28,89 @@ import numpy as np
 
 _SEP = "/"
 _BF16_TAG = "__bf16__"
+_META_KEY = "__metadata__"
+
+
+def _normalize(path) -> Path:
+    """Carry the ``.npz`` suffix explicitly (np.savez appends it silently,
+    which would make a suffix-less ``save``/``restore`` pair miss)."""
+    path = Path(path)
+    if path.suffix != ".npz":
+        path = path.with_name(path.name + ".npz")
+    return path
+
+
+def _join(kp) -> str:
+    return _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in kp)
 
 
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for kp, leaf in flat:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in kp)
+        key = _join(kp)
+        if key == _META_KEY:
+            raise ValueError(
+                f"tree leaf keyed {_META_KEY!r} collides with the reserved "
+                "metadata entry — rename the leaf")
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:
-            out[key + _BF16_TAG] = arr.view(np.uint16)
-        else:
-            out[key] = arr
+            key, arr = key + _BF16_TAG, arr.view(np.uint16)
+        if key in out:
+            raise ValueError(
+                f"distinct tree paths flatten to the same key {key!r} "
+                "(a dict key containing '/', or a bf16 leaf shadowing "
+                f"an explicit '*{_BF16_TAG}' key) — the checkpoint would "
+                "silently drop one of them")
+        out[key] = arr
     return out
 
 
 def save(path, tree, metadata=None):
-    """Write a pytree checkpoint to ``path`` (.npz)."""
-    path = Path(path)
+    """Write a pytree checkpoint to ``path`` (.npz appended if missing)."""
+    path = _normalize(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
     if metadata is not None:
-        flat["__metadata__"] = np.frombuffer(
+        flat[_META_KEY] = np.frombuffer(
             json.dumps(metadata).encode(), dtype=np.uint8)
     np.savez(path, **flat)
 
 
-def restore(path, like):
-    """Load a checkpoint into the structure of ``like`` (a template tree)."""
-    data = np.load(Path(path), allow_pickle=False)
+def load_arrays(path):
+    """All leaf arrays of a checkpoint keyed by their ``/``-joined tree
+    paths (bf16-tagged entries decoded back to bfloat16), plus the metadata
+    dict (None when absent) — the structure-free view ``restore`` and the
+    engine-state resume path build trees from."""
+    data = np.load(_normalize(path), allow_pickle=False)
+    out = {}
+    for key in data.files:
+        if key == _META_KEY:
+            continue
+        if key.endswith(_BF16_TAG):
+            out[key[:-len(_BF16_TAG)]] = (
+                jnp.asarray(data[key]).view(jnp.bfloat16))
+        else:
+            out[key] = data[key]
+    meta = (json.loads(bytes(data[_META_KEY]).decode())
+            if _META_KEY in data.files else None)
+    return out, meta
+
+
+def unflatten_like(like, flat, prefix: str = ""):
+    """Rebuild a tree with ``like``'s structure from a flat key->array dict
+    (the ``load_arrays`` view), reading each leaf at ``prefix + keypath``.
+    Raises ``KeyError`` on missing leaves and ``ValueError`` on shape
+    mismatches."""
     flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     leaves = []
     for kp, leaf in flat_like:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in kp)
-        if key + _BF16_TAG in data:
-            arr = jnp.asarray(data[key + _BF16_TAG]).view(jnp.bfloat16)
-        else:
-            arr = jnp.asarray(data[key])
+        key = prefix + _join(kp)
+        if key not in flat:
+            raise KeyError(f"checkpoint is missing leaf {key!r}")
+        arr = jnp.asarray(flat[key])
         if arr.shape != leaf.shape:
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")
@@ -63,8 +118,11 @@ def restore(path, like):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def restore(path, like):
+    """Load a checkpoint into the structure of ``like`` (a template tree)."""
+    flat, _ = load_arrays(path)
+    return unflatten_like(like, flat)
+
+
 def metadata(path):
-    data = np.load(Path(path), allow_pickle=False)
-    if "__metadata__" in data:
-        return json.loads(bytes(data["__metadata__"]).decode())
-    return None
+    return load_arrays(path)[1]

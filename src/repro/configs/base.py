@@ -433,6 +433,66 @@ class LatencyConfig:
 
 
 @dataclass(frozen=True)
+class ChurnConfig:
+    """Client-churn / failure injection for the simulated event clock
+    (``core/latency.py`` draws, ``core/async_engine.py`` recovery).
+
+    Real edge fleets lose clients mid-round (the paper's Pi cluster, §5.5;
+    arXiv:2201.11248, arXiv:2404.03320) — this stage makes dispatched work
+    able to *never arrive* and membership able to change across rounds,
+    with every draw a pure function of ``(seed, round, slot)`` so a faulty
+    schedule replays bit-exactly.
+
+    ``dropout_prob``
+        Per-dispatch probability a client fails MID-UPLOAD: its update gets
+        an infinite finish time and the server only learns about it via the
+        dispatch timeout.  Requires ``mode="semi_sync"`` — a synchronous
+        round that waits for a vanished client would simply never end.
+    ``absent_prob``
+        Per-round probability a member is unavailable for selection (device
+        off / left the fleet / rejoined later) — join/leave membership
+        churn, applied before the select stage.  Valid in every mode.
+    ``timeout_rounds``
+        Dispatch timeout, in rounds: work still unarrived
+        ``timeout_rounds`` rounds after its (re)dispatch is declared
+        abandoned.  The server cannot distinguish a crashed client from an
+        extreme straggler, so timeouts abandon both.
+    ``max_retries``
+        Re-dispatch attempts for abandoned non-cohort work (the client
+        re-uploads its retained transformed delta, charged a fresh uplink
+        latency draw; the retry can itself drop out).  Under cohort-atomic
+        folds (secure aggregation) abandoned members are not retried —
+        the surviving cohort re-keys instead (``core/secure_agg.py``).
+    """
+    dropout_prob: float = 0.0          # P(dispatched upload never arrives)
+    absent_prob: float = 0.0           # P(member unavailable in a round)
+    timeout_rounds: int = 2            # rounds before unarrived work is
+    #                                  # declared abandoned
+    max_retries: int = 1               # re-dispatches per abandoned update
+
+    def __post_init__(self):
+        if not 0.0 <= self.dropout_prob < 1.0:
+            raise ValueError("dropout_prob must be in [0, 1), got "
+                             f"{self.dropout_prob}")
+        if not 0.0 <= self.absent_prob < 1.0:
+            raise ValueError("absent_prob must be in [0, 1), got "
+                             f"{self.absent_prob}")
+        if self.timeout_rounds < 1:
+            raise ValueError("timeout_rounds must be >= 1, got "
+                             f"{self.timeout_rounds}")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+
+    @property
+    def faulty(self) -> bool:
+        """True when dispatched work can fail to arrive (dropouts on) —
+        the engine only runs timeout/recovery bookkeeping then, so
+        churn-off runs stay bit-identical to the fault-free engine."""
+        return self.dropout_prob > 0.0
+
+
+@dataclass(frozen=True)
 class AsyncConfig:
     """Round-pacing stage: synchronous vs semi-synchronous buffered rounds
     (``core/async_engine.py``).
@@ -567,13 +627,25 @@ class FLConfig:
     stragglers: str = "deterministic"  # latency distribution (see LatencyConfig)
     straggler_jitter: float = 0.5      # straggler spread (ignored when
     #                                  # stragglers="deterministic")
+    # ------------------------------------------------- client-churn stage
+    dropout_prob: float = 0.0          # P(dispatched upload never arrives);
+    #                                  # semi_sync only (see ChurnConfig)
+    absent_prob: float = 0.0           # P(member unavailable in a round)
+    timeout_rounds: int = 2            # dispatch timeout (rounds) before
+    #                                  # unarrived work is abandoned
+    max_retries: int = 1               # re-dispatches per abandoned update
 
     def __post_init__(self):
         # materializing every typed stage view runs that stage's own
         # validation -> bad names/knobs fail here, at construction
         _ = (self.sampling_config, self.client_opt, self.transform,
              self.aggregation_config, self.server, self.async_config,
-             self.secure, self.privacy)
+             self.secure, self.privacy, self.churn)
+        if self.dropout_prob > 0.0 and self.mode != "semi_sync":
+            raise ValueError(
+                "dropout_prob > 0 requires mode='semi_sync': a synchronous "
+                "round waits for every client, so a vanished upload would "
+                "gate it forever (absent_prob works in any mode)")
 
     # ------------------------------------------------- typed stage views
     @property
@@ -610,6 +682,13 @@ class FLConfig:
                            latency=LatencyConfig(
                                distribution=self.stragglers,
                                jitter=self.straggler_jitter))
+
+    @property
+    def churn(self) -> ChurnConfig:
+        return ChurnConfig(dropout_prob=self.dropout_prob,
+                           absent_prob=self.absent_prob,
+                           timeout_rounds=self.timeout_rounds,
+                           max_retries=self.max_retries)
 
     @property
     def secure(self) -> SecureAggConfig:

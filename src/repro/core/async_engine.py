@@ -44,6 +44,19 @@ time without a server step (``SemiSyncState.empty_flushes``).
 clock advances to the EARLIEST in-flight arrival and the server steps per
 flush — benchmarked against sync/semi-sync by ``bench_scalability --mode
 async``.
+
+**Failure injection** (``ChurnConfig``, PR 6): with ``dropout_prob > 0``
+the latency model marks some dispatched uploads as lost mid-flight
+(``finish_time = inf`` — replayable per ``(seed, round, slot)``).  The
+timeout sweep (:func:`_handle_timeouts`) runs at the top of every step:
+plain semi-sync retries the client's retained delta (uplink-only cost, up
+to ``max_retries``); cohort-atomic folds instead RE-KEY the whole cohort —
+unarrived members are abandoned and the arrived survivors re-mask under the
+next key generation restricted to the surviving slots, without the server
+ever seeing a pre-mask delta (see ``secure_agg.mask_contribution``).  A
+flush whose in-flight set is entirely lost advances nothing
+(``empty_flushes``).  With ``dropout_prob == 0`` none of this machinery
+runs and the schedule is bit-identical to the churn-free engine.
 """
 from __future__ import annotations
 
@@ -60,6 +73,7 @@ from repro.configs.base import (AggregationConfig, AsyncConfig,
                                 ForecasterConfig, SecureAggConfig,
                                 TransformConfig)
 from repro.core import aggregation as aggregation_mod
+from repro.core import secure_agg as secure_agg_mod
 from repro.core import server_opt as server_opt_mod
 from repro.core import transforms as transforms_mod
 from repro.core.client import local_update
@@ -177,16 +191,26 @@ def buffered_aggregate(params, deltas, weights):
     return jax.tree.map(lambda g, s: g + s / wsum, params, sums)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)     # identity eq: deltas are array trees
 class PendingUpdate:
     """One dispatched-but-not-yet-aggregated client update (host-side).
     ``delta`` is already transformed (clipped/noised/quantized at dispatch
-    with the dispatch-round key) — the buffer never holds raw updates."""
+    with the dispatch-round key) — the buffer never holds raw updates.
+
+    ``finish_time = inf`` marks a mid-upload failure (``ChurnConfig``): the
+    upload never arrives, and the timeout sweep (``_handle_timeouts``)
+    eventually retries or abandons it.  ``retry_round`` is the round the
+    update was (re)dispatched — the timeout baseline — and ``slot`` the
+    client's dispatch slot, which keys its straggler/dropout draws and its
+    position in the secure-agg mask cohort."""
     delta: PyTree                      # np arrays, computed at dispatch
     weight: float                      # base aggregation weight (pre-discount)
     loss: float                        # client's local training loss
     dispatch_round: int
     finish_time: float                 # simulated arrival (absolute seconds)
+    slot: int = 0                      # global dispatch slot
+    retries: int = 0                   # re-dispatch attempts so far
+    retry_round: int = 0               # round of the latest (re)dispatch
 
 
 def _tree_slice(tree, i: int):
@@ -211,9 +235,14 @@ class SemiSyncState:
     simulated clock.  One per :class:`~repro.core.fedavg.RoundEngine`;
     reset between independent trainings (per cluster).
 
-    ``cohort_sizes`` tracks how many REAL clients each dispatch round put
-    in flight — the bookkeeping cohort-atomic folds (secure aggregation)
-    need to decide when a cohort is complete.
+    ``cohort_sizes`` tracks how many REAL clients each dispatch round still
+    has in the running — the bookkeeping cohort-atomic folds (secure
+    aggregation) need to decide when a cohort is complete, decremented when
+    a timeout abandons members.  ``cohort_w`` / ``cohort_gen`` carry each
+    live cohort's current weight vector and re-key generation (dropout
+    recovery re-masks survivors under generation g+1 with the dropped slots
+    zeroed).  All three dicts are swept once no pending update references
+    their round, so they stay O(live cohorts) on arbitrarily long runs.
     """
 
     def __init__(self) -> None:
@@ -221,12 +250,164 @@ class SemiSyncState:
         self.clock = 0.0
         self.late_folds = 0            # stale updates folded so far
         self.max_staleness = 0         # largest tau seen
-        self.cohort_sizes: dict = {}   # dispatch round -> # real dispatched
+        self.cohort_sizes: dict = {}   # dispatch round -> # live dispatched
+        self.cohort_w: dict = {}       # dispatch round -> (M,) weight vector
+        self.cohort_gen: dict = {}     # dispatch round -> re-key generation
         self.empty_flushes = 0         # cohort-atomic flushes with no
         #                              # complete cohort (no server step)
+        self.rekeys = 0                # cohort re-keys (dropout recovery)
+        self.abandoned = 0             # updates dropped for good (timeout)
 
     def reset(self) -> None:
         self.__init__()
+
+    def _sweep(self) -> None:
+        """Drop cohort bookkeeping no pending update references (leak fix:
+        entries used to accumulate forever in plain semi-sync mode)."""
+        live = {p.dispatch_round for p in self.pending}
+        for r in [r for r in self.cohort_sizes if r not in live]:
+            self.cohort_sizes.pop(r)
+            self.cohort_w.pop(r, None)
+            self.cohort_gen.pop(r, None)
+
+    # ---- checkpointing (fedavg.run_federated_training) -------------------
+    def to_tree(self):
+        """The full event state as a checkpointable pytree of numpy arrays
+        (float64 scalars — the simulated clock and finish times round-trip
+        exactly, which the bit-identical-resume pin needs)."""
+        rounds = sorted(self.cohort_sizes)
+        return {
+            "clock": np.asarray([self.clock], np.float64),
+            "counters": np.asarray(
+                [self.late_folds, self.max_staleness, self.empty_flushes,
+                 self.rekeys, self.abandoned], np.int64),
+            "pending": [
+                {"delta": p.delta,
+                 "scalars": np.asarray(
+                     [p.weight, p.loss, p.dispatch_round, p.finish_time,
+                      p.slot, p.retries, p.retry_round], np.float64)}
+                for p in self.pending],
+            "cohort_rounds": np.asarray(rounds, np.int64),
+            "cohort_sizes": np.asarray(
+                [self.cohort_sizes[r] for r in rounds], np.int64),
+            "cohort_gens": np.asarray(
+                [self.cohort_gen.get(r, 0) for r in rounds], np.int64),
+            "cohort_w": (np.stack([np.asarray(self.cohort_w[r], np.float32)
+                                   for r in rounds])
+                         if rounds else np.zeros((0, 0), np.float32)),
+        }
+
+    @classmethod
+    def from_tree(cls, tree) -> "SemiSyncState":
+        ss = cls()
+        ss.clock = float(np.asarray(tree["clock"]).reshape(-1)[0])
+        (ss.late_folds, ss.max_staleness, ss.empty_flushes, ss.rekeys,
+         ss.abandoned) = (int(v) for v in np.asarray(tree["counters"]))
+        for entry in tree["pending"]:
+            w, l, dr, ft, slot, rt, rr = (
+                float(v) for v in np.asarray(entry["scalars"]))
+            ss.pending.append(PendingUpdate(
+                delta=jax.tree.map(np.asarray, entry["delta"]),
+                weight=w, loss=l, dispatch_round=int(dr), finish_time=ft,
+                slot=int(slot), retries=int(rt), retry_round=int(rr)))
+        for i, r in enumerate(np.asarray(tree["cohort_rounds"], np.int64)):
+            ss.cohort_sizes[int(r)] = int(tree["cohort_sizes"][i])
+            ss.cohort_gen[int(r)] = int(tree["cohort_gens"][i])
+            ss.cohort_w[int(r)] = np.asarray(tree["cohort_w"][i], np.float32)
+        return ss
+
+
+def _handle_timeouts(engine, round_idx: int, stream: int) -> None:
+    """Sweep the pending buffer for abandoned work (``ChurnConfig``): any
+    update still unarrived ``timeout_rounds`` dispatches after its latest
+    (re)dispatch is presumed lost — the server cannot distinguish a dropped
+    upload from a merely slow one, so both are treated alike.
+
+    *Plain semi-sync* (no cohort-atomic folds): the server asks the client to
+    re-send its retained transformed delta — uplink-only cost on the re-upload
+    latency stream, a fresh dropout draw per attempt, up to
+    ``max_retries`` attempts, then the update is abandoned for good.
+
+    *Cohort-atomic folds* (secure aggregation): a lost member means the
+    cohort's pairwise masks can never cancel, so the whole cohort re-keys
+    (Bonawitz-style recovery): unarrived members are abandoned, the
+    surviving (arrived) members re-mask under the next key generation
+    restricted to the surviving slots — via the mask-correction algebra of
+    :func:`~repro.core.secure_agg.mask_contribution`, so the server never
+    holds a pre-mask delta — and re-upload, charged on the re-upload latency
+    stream.  Survivors therefore become in-flight again (their re-masked
+    upload must arrive before the cohort can fold).  A cohort with no
+    survivors is dropped entirely.  Without masking the same scheduling runs
+    with no delta rewrite, which is what keeps the masked == clear pins
+    valid under churn.
+    """
+    ss: SemiSyncState = engine.async_state
+    churn = engine.latency.churn
+    overdue = [p for p in ss.pending
+               if p.finish_time > ss.clock
+               and round_idx - p.retry_round >= churn.timeout_rounds]
+    if not overdue:
+        return
+
+    if not engine.async_cfg.cohort_atomic:
+        for p in overdue:
+            if p.retries >= churn.max_retries:
+                ss.pending.remove(p)
+                ss.abandoned += 1
+                continue
+            p.retries += 1
+            p.retry_round = round_idx
+            re_t = float(engine.latency.reupload_times(
+                round_idx, [p.slot], attempt=p.retries)[0])
+            drop = bool(engine.latency.dropouts(
+                round_idx, [p.slot], attempt=p.retries)[0])
+            p.finish_time = float("inf") if drop else ss.clock + re_t
+        ss._sweep()
+        return
+
+    # cohort-atomic: recover every cohort that lost a member
+    masker = (secure_agg_mod.make_masker(engine.secure)
+              if engine.secure is not None else None)
+    for r in sorted({p.dispatch_round for p in overdue}):
+        cohort = [p for p in ss.pending if p.dispatch_round == r]
+        lost = [p for p in cohort if p.finish_time > ss.clock]
+        survivors = [p for p in cohort if p.finish_time <= ss.clock]
+        for p in lost:
+            ss.pending.remove(p)
+        ss.abandoned += len(lost)
+        if not survivors:
+            # everyone lost: the cohort is gone (sweep drops its books)
+            continue
+        gen = ss.cohort_gen.get(r, 0)
+        w_old = np.asarray(ss.cohort_w[r], np.float32)
+        w_new = w_old.copy()
+        w_new[[p.slot for p in lost]] = 0.0
+        if masker is not None:
+            old_key = engine.rekey_key(r, stream, gen)
+            new_key = engine.rekey_key(r, stream, gen + 1)
+            for p in survivors:
+                old_m = jax.device_get(secure_agg_mod.mask_contribution(
+                    masker, p.delta, p.slot, w_old, old_key))
+                new_m = jax.device_get(secure_agg_mod.mask_contribution(
+                    masker, p.delta, p.slot, w_new, new_key))
+                p.delta = jax.tree.map(lambda d, o, n: np.asarray(d - o + n),
+                                       p.delta, old_m, new_m)
+        # survivors re-upload their (re-masked) deltas: in-flight again,
+        # with a fresh dropout draw — a failed re-upload triggers the next
+        # generation's recovery at a later timeout
+        slots = np.asarray([p.slot for p in survivors])
+        re_t = engine.latency.reupload_times(round_idx, slots,
+                                             attempt=gen + 1)
+        drop = engine.latency.dropouts(round_idx, slots, attempt=gen + 1)
+        for p, t, d in zip(survivors, re_t, drop):
+            p.finish_time = float("inf") if d else ss.clock + float(t)
+            p.retry_round = round_idx
+            p.retries += 1
+        ss.cohort_sizes[r] = len(survivors)
+        ss.cohort_w[r] = w_new
+        ss.cohort_gen[r] = gen + 1
+        ss.rekeys += 1
+    ss._sweep()
 
 
 def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
@@ -242,12 +423,23 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
     ss: SemiSyncState = engine.async_state
     acfg: AsyncConfig = engine.async_cfg
     ccfg = engine.flcfg.client_opt
+    churn = engine.latency.churn
+    if churn.faulty:
+        # retry / re-key abandoned work BEFORE this round's dispatch, so a
+        # recovered cohort can complete at this very flush
+        _handle_timeouts(engine, round_idx, stream)
     w_in = np.asarray(weights, np.float32)
     real = np.flatnonzero(w_in > 0)    # mesh-padding duplicates excluded
 
-    # -- dispatch: assign every real client a simulated finish time
-    times = engine.latency.times(round_idx, w_in[real], ccfg.local_epochs)
+    # -- dispatch: assign every real client a simulated finish time; a
+    # mid-upload failure (ChurnConfig.dropout_prob) makes it infinite — the
+    # upload simply never arrives, and only the timeout sweep notices
+    times = engine.latency.times(round_idx, w_in[real], ccfg.local_epochs,
+                                 slots=real)
     finish = ss.clock + times
+    if churn.faulty:
+        finish = np.where(engine.latency.dropouts(round_idx, real),
+                          np.inf, finish)
 
     # -- flush point: clock advances to the k-th earliest arrival among
     # everything in flight (old stragglers + this round's dispatch); a
@@ -256,15 +448,19 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
     # folds the buffer can hold ARRIVED updates whose cohort is still
     # incomplete — those must not gate the clock (they'd pin it to past
     # arrival times forever), so the k-count sees only unarrived work.
+    # Dropped uploads (finish = inf) can never gate it either.
     in_flight = [p.finish_time for p in ss.pending
                  if not acfg.cohort_atomic or p.finish_time > ss.clock]
     pend_finish = np.asarray(in_flight + list(finish))
+    finite = pend_finish[np.isfinite(pend_finish)]
     if acfg.buffer_frac:
         k_cfg = max(1, int(np.ceil(acfg.buffer_frac * len(finish))))
     else:
         k_cfg = engine.buffer_k
-    k = min(k_cfg, len(pend_finish))
-    new_clock = float(np.partition(pend_finish, k - 1)[k - 1])
+    k = min(k_cfg, len(finite))
+    have_flush = len(finite) > 0
+    new_clock = (float(np.partition(finite, k - 1)[k - 1]) if have_flush
+                 else ss.clock)
     arrive_now = finish <= new_clock
 
     if not ss.pending and bool(arrive_now.all()):
@@ -306,8 +502,18 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
         ss.pending.append(PendingUpdate(
             delta=_tree_slice(deltas, int(i)), weight=float(base_w[i]),
             loss=float(closs[i]), dispatch_round=round_idx,
-            finish_time=float(finish[j])))
+            finish_time=float(finish[j]), slot=int(i),
+            retry_round=round_idx))
     ss.cohort_sizes[round_idx] = len(real)
+    ss.cohort_w[round_idx] = np.asarray(base_w, np.float32).copy()
+    ss.cohort_gen[round_idx] = 0
+
+    if not have_flush:
+        # EVERYTHING in flight is a dropped upload: nothing can arrive, so
+        # buffer the dispatch, leave the clock alone, and wait for the
+        # timeout sweep to retry / re-key
+        ss.empty_flushes += 1
+        return params, state, jnp.asarray(float("nan"))
 
     arrived = [p for p in ss.pending if p.finish_time <= new_clock]
     if acfg.cohort_atomic:
@@ -328,14 +534,13 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
             ss.clock = new_clock
             ss.empty_flushes += 1
             return params, state, jnp.asarray(float("nan"))
-        # a complete cohort means EVERY member arrived, so dropping by
+        # a complete cohort means EVERY live member arrived, so dropping by
         # dispatch round removes exactly the folded updates
         ss.pending = [p for p in ss.pending
                       if p.dispatch_round not in complete]
-        for r in complete:
-            ss.cohort_sizes.pop(r, None)
     else:
         ss.pending = [p for p in ss.pending if p.finish_time > new_clock]
+    ss._sweep()
     ss.clock = new_clock
 
     tau = np.asarray([round_idx - p.dispatch_round for p in arrived])

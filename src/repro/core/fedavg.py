@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import checkpoint as checkpoint_mod
 from repro.configs.base import (AggregationConfig, FLConfig, ForecasterConfig,
                                 SecureAggConfig, TransformConfig)
 from repro.core import aggregation as aggregation_mod
@@ -401,7 +402,8 @@ class RoundEngine:
         wire_bits = 0 if self.secure is not None else flcfg.quantize_bits
         self.latency = latency_mod.LatencyModel(
             self.async_cfg.latency, flcfg.seed,
-            latency_mod.payload_bytes(fcfg.num_params(), wire_bits))
+            latency_mod.payload_bytes(fcfg.num_params(), wire_bits),
+            churn=flcfg.churn)
         self.async_state = async_engine.SemiSyncState()
         self._client_fn = None
         if self.async_cfg.mode == "semi_sync":
@@ -461,6 +463,22 @@ class RoundEngine:
         rk = jax.random.fold_in(jax.random.PRNGKey(self.flcfg.seed), stream)
         return jax.random.fold_in(rk, round_idx)
 
+    def rekey_key(self, round_idx: int, stream: int = 0,
+                  generation: int = 0):
+        """The shared cohort key at dropout-recovery generation ``g``
+        (``core/async_engine._handle_timeouts``): generation 0 is the
+        dispatch key itself (``base_round_key``); after a timeout the
+        survivors re-mask under ``fold_in(fold_in(base, _REKEY_DOMAIN), g)``
+        — derivable by every survivor from the round's key agreement, and
+        domain-separated so no generation's masks collide with any dispatch
+        round's."""
+        rk = self.base_round_key(round_idx, stream)
+        if generation == 0:
+            return rk
+        return jax.random.fold_in(
+            jax.random.fold_in(rk, secure_agg_mod._REKEY_DOMAIN),
+            generation)
+
     def round_keys(self, round_idx: int, m: int, stream: int = 0):
         """Per-client transform keys for one round: deterministic in
         (``FLConfig.seed``, ``stream``, round index, selection slot), so DP
@@ -515,7 +533,8 @@ class RoundEngine:
         w_np = np.asarray(weights, np.float32)
         real = np.flatnonzero(w_np > 0)
         times = self.latency.times(round_idx, w_np[real],
-                                   self.flcfg.client_opt.local_epochs)
+                                   self.flcfg.client_opt.local_epochs,
+                                   slots=real)
         self.async_state.clock += float(times.max(initial=0.0))
         return self._sync_step(params, state, x, y, batch_idx, weights,
                                round_idx, stream)
@@ -609,9 +628,37 @@ def _as_provider(data, fcfg: ForecasterConfig) -> windows.ClientWindowProvider:
         data, fcfg.lookback, fcfg.horizon, cache_size=len(data))
 
 
+def _restore_async_state(flat, n_pending: int, params):
+    """Rebuild a ``SemiSyncState`` from a checkpoint's flat array view
+    (keys under ``cur/async/``); ``params`` supplies the delta tree
+    structure (a buffered delta has exactly the param tree's shape)."""
+    from repro.core import async_engine
+    delta_like = jax.tree.map(np.asarray, params)
+    tree = {
+        "clock": flat["cur/async/clock"],
+        "counters": flat["cur/async/counters"],
+        "pending": [
+            {"delta": jax.tree.map(
+                np.asarray, checkpoint_mod.unflatten_like(
+                    delta_like, flat,
+                    prefix=f"cur/async/pending/{i}/delta/")),
+             "scalars": flat[f"cur/async/pending/{i}/scalars"]}
+            for i in range(n_pending)],
+        "cohort_rounds": flat["cur/async/cohort_rounds"],
+        "cohort_sizes": flat["cur/async/cohort_sizes"],
+        "cohort_gens": flat["cur/async/cohort_gens"],
+        "cohort_w": flat["cur/async/cohort_w"],
+    }
+    return async_engine.SemiSyncState.from_tree(tree)
+
+
 def run_federated_training(all_series, fcfg: ForecasterConfig,
                            flcfg: FLConfig, *, mesh=None,
-                           log_every: int = 0) -> Dict[int, FLResult]:
+                           log_every: int = 0,
+                           checkpoint_path=None, checkpoint_every: int = 1,
+                           resume: bool = True,
+                           stop_after_rounds: Optional[int] = None
+                           ) -> Dict[int, FLResult]:
     """Full Alg. 1 via the round engine: optional client holdout, optional
     clustering, then per-cluster federated training.
 
@@ -623,6 +670,19 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
     training entirely (unseen-client generalization split; their indices are
     reported on every ``FLResult.heldout_clients``).  Returns
     {cluster_id: FLResult}; cluster_id = -1 when clustering is off.
+
+    **Checkpoint/resume** (``checkpoint_path``): every ``checkpoint_every``
+    rounds the FULL engine state — params, server-optimizer moments, the
+    semi-sync pending buffer (deltas, weights, finish times, cohort re-key
+    bookkeeping), the event clock, the RDP accountant, the driver's rng —
+    is written to one ``.npz``; an existing checkpoint (same config —
+    enforced by fingerprint) resumes the run and reproduces the remaining
+    loss/eps/sim histories BIT-identically to the uninterrupted run (pinned
+    by regression test).  Holdout split, clustering, and selection replay
+    deterministically from the seed, so only genuinely mutable state is
+    stored.  ``stop_after_rounds`` ends the call after that many executed
+    rounds (a graceful kill, for tests and budgeted jobs) — the returned
+    dict then holds the partial current cluster.
     """
     provider = _as_provider(all_series, fcfg)
     holdout_rng, rng = _seed_rngs(flcfg.seed)
@@ -663,7 +723,43 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         cents, assigns = None, None
         groups = {-1: train_ids}
 
+    # -------- resume: load the full engine snapshot when one exists
+    ckpt_flat = ckpt_meta = None
+    if checkpoint_path is not None and resume and \
+            checkpoint_mod._normalize(checkpoint_path).exists():
+        ckpt_flat, ckpt_meta = checkpoint_mod.load_arrays(checkpoint_path)
+        if ckpt_meta.get("flcfg") != repr(flcfg):
+            raise ValueError(
+                f"checkpoint {checkpoint_path} was written by a different "
+                "FLConfig — resuming would silently change the run; delete "
+                "it or pass resume=False")
+
     results: Dict[int, FLResult] = {}
+    executed = 0
+
+    def _save(cid, params, sstate, hist, sim_hist, eps_hist, t_done):
+        tree = {
+            "cur": {"params": params,
+                    "server": {"m": sstate.m, "v": sstate.v, "t": sstate.t},
+                    "async": engine.async_state.to_tree(),
+                    "hist": np.asarray(hist, np.float64),
+                    "sim": np.asarray(sim_hist, np.float64),
+                    "eps": np.asarray(eps_hist, np.float64)},
+            "done": {str(dc): {
+                "params": results[dc].params,
+                "hist": np.asarray(results[dc].loss_history, np.float64),
+                "sim": np.asarray(results[dc].sim_times, np.float64),
+                "eps": np.asarray(results[dc].eps_history, np.float64)}
+                for dc in results},
+        }
+        meta = {"version": 1, "flcfg": repr(flcfg), "cluster": int(cid),
+                "rounds_done": int(t_done),
+                "done": [int(dc) for dc in results],
+                "rng": rng.bit_generator.state,
+                "accountant": engine.accountant.state_dict(),
+                "n_pending": len(engine.async_state.pending)}
+        checkpoint_mod.save(checkpoint_path, tree, metadata=meta)
+
     for cid, members in groups.items():
         key = jax.random.PRNGKey(flcfg.seed + (cid if cid >= 0 else 0))
         params, sstate = engine.init(key)
@@ -675,6 +771,41 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         # (eps, delta) accounting for THIS cluster's mechanism: sampling
         # rate = dispatch size / cluster membership, stepped per flush
         engine.attach_accountant(len(members), m_sel)
+        t0 = 0
+        if ckpt_meta is not None and int(cid) in ckpt_meta["done"]:
+            # finished before the kill: rebuild its result from the snapshot
+            # (privacy report recomposes deterministically from the round
+            # count; centroids/holdout were recomputed above from the seed)
+            pref = f"done/{cid}/"
+            engine.accountant.load_state({"rounds": flcfg.rounds})
+            results[cid] = FLResult(
+                jax.device_get(checkpoint_mod.unflatten_like(
+                    params, ckpt_flat, prefix=pref + "params/")),
+                np.asarray(ckpt_flat[pref + "hist"]),
+                cents, assigns, held_ids if len(held_ids) else None,
+                sim_times=np.asarray(ckpt_flat[pref + "sim"]),
+                eps_history=np.asarray(ckpt_flat[pref + "eps"]),
+                privacy=engine.accountant.report())
+            continue
+        if ckpt_meta is not None and int(cid) == int(ckpt_meta["cluster"]):
+            # mid-cluster kill point: restore the live engine state and the
+            # driver rng, then continue the round loop where it stopped
+            params = checkpoint_mod.unflatten_like(params, ckpt_flat,
+                                                   prefix="cur/params/")
+            sstate = server_opt_mod.ServerState(
+                m=checkpoint_mod.unflatten_like(sstate.m, ckpt_flat,
+                                                prefix="cur/server/m/"),
+                v=checkpoint_mod.unflatten_like(sstate.v, ckpt_flat,
+                                                prefix="cur/server/v/"),
+                t=jnp.asarray(ckpt_flat["cur/server/t"], jnp.int32))
+            engine.async_state = _restore_async_state(
+                ckpt_flat, int(ckpt_meta["n_pending"]), params)
+            engine.accountant.load_state(ckpt_meta["accountant"])
+            rng.bit_generator.state = ckpt_meta["rng"]
+            hist = [float(v) for v in ckpt_flat["cur/hist"]]
+            sim_hist = [float(v) for v in ckpt_flat["cur/sim"]]
+            eps_hist = [float(v) for v in ckpt_flat["cur/eps"]]
+            t0 = int(ckpt_meta["rounds_done"])
         if (engine.async_cfg.mode == "semi_sync"
                 and engine.async_cfg.buffer_k >= m_sel > 0
                 and engine.async_cfg.buffer_k):
@@ -688,8 +819,20 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         # fewer clients than configured); pads are cycled duplicates that
         # enter the round with weight 0, so the math is unchanged
         m_run = -(-m_sel // n_dev) * n_dev
-        for t in range(flcfg.rounds):
-            sel = engine.select(rng, members, m_sel, t, counts[members])
+        stopped = False
+        for t in range(t0, flcfg.rounds):
+            # membership churn: absent members sit this round out (pure
+            # function of (seed, round, client id) — replayable).  If the
+            # whole cluster is absent, fall back to full membership rather
+            # than dispatch nothing.  Shapes stay fixed at m_run: a smaller
+            # selection just grows the zero-weight padding.
+            avail = members
+            if engine.latency.churn.absent_prob > 0.0:
+                mask = engine.latency.available(t, members)
+                if mask.any():
+                    avail = members[mask]
+            sel = engine.select(rng, avail, min(m_sel, len(avail)), t,
+                                counts[avail])
             bidx = partition.ragged_minibatch_indices(
                 rng, counts[sel], steps, ccfg.batch_size)
             pad_idx = np.resize(np.arange(len(sel)), m_run)
@@ -708,12 +851,23 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
                 eps_s = f" eps {eps:.2f}" if np.isfinite(eps) else ""
                 print(f"[cluster {cid}] round {t+1}/{flcfg.rounds} "
                       f"loss {hist[-1]:.5f} sim_t {sim_hist[-1]:.1f}s{eps_s}")
+            executed += 1
+            stopped = (stop_after_rounds is not None
+                       and executed >= stop_after_rounds)
+            if checkpoint_path is not None and (
+                    (t + 1) % max(checkpoint_every, 1) == 0
+                    or t + 1 == flcfg.rounds or stopped):
+                _save(cid, params, sstate, hist, sim_hist, eps_hist, t + 1)
+            if stopped:
+                break
         results[cid] = FLResult(jax.device_get(params), np.array(hist),
                                 cents, assigns,
                                 held_ids if len(held_ids) else None,
                                 sim_times=np.array(sim_hist),
                                 eps_history=np.array(eps_hist),
                                 privacy=engine.accountant.report())
+        if stopped:
+            break
     return results
 
 

@@ -55,11 +55,15 @@ from typing import Dict
 import numpy as np
 
 from repro.configs.base import (STRAGGLER_DISTRIBUTIONS,  # noqa: F401 (re-export)
-                                LatencyConfig)
+                                ChurnConfig, LatencyConfig)
 
-# domain-separation tag for the latency rng stream: decorrelates latency
-# draws from every other consumer of FLConfig.seed (sampler, holdout, keys)
-_LATENCY_STREAM = 0x1A7E
+# domain-separation tags for the event-clock rng streams: decorrelate
+# latency/churn draws from every other consumer of FLConfig.seed (sampler,
+# holdout, transform keys) and from each other
+_LATENCY_STREAM = 0x1A7E               # straggler multipliers
+_DROPOUT_STREAM = 0xD209               # mid-upload failure draws
+_AVAIL_STREAM = 0xA7A1                 # per-round membership availability
+_REUPLOAD_STREAM = 0x2E71              # retry / re-key re-upload latency
 
 
 def payload_bytes(n_params: int, quantize_bits: int = 0) -> float:
@@ -74,40 +78,96 @@ def payload_bytes(n_params: int, quantize_bits: int = 0) -> float:
     return n_params * 4.0
 
 
-class LatencyModel:
-    """Per-round client finish-time sampler (all host-side numpy)."""
+def _slot_rngs(stream: int, seed: int, round_idx: int, slots, *extra):
+    """One decorrelated ``np.random.Generator`` per slot, seeded by the full
+    ``(stream, seed, round, slot, *extra)`` tuple — a draw is a pure function
+    of the slot VALUE, never of its position in the dispatch ordering."""
+    return [np.random.default_rng(np.random.SeedSequence(
+        [int(stream), int(seed), int(round_idx), int(s),
+         *(int(e) for e in extra)])) for s in np.asarray(slots, np.int64)]
 
-    def __init__(self, cfg: LatencyConfig, seed: int,
-                 payload: float) -> None:
+
+class LatencyModel:
+    """Per-round client finish-time + failure sampler (all host-side numpy).
+
+    ``churn`` adds the failure-injection draws (mid-upload dropout,
+    per-round membership availability) on their own rng streams; the
+    default ``ChurnConfig()`` injects nothing.
+    """
+
+    def __init__(self, cfg: LatencyConfig, seed: int, payload: float,
+                 churn: ChurnConfig = ChurnConfig()) -> None:
         self.cfg = cfg
+        self.churn = churn
         self.seed = int(seed)
         self.uplink_s = float(payload) / cfg.uplink_bytes_per_s
 
-    def _multipliers(self, round_idx: int, n: int) -> np.ndarray:
+    def _multipliers(self, round_idx: int, slots,
+                     stream: int = _LATENCY_STREAM,
+                     attempt: int = 0) -> np.ndarray:
         cfg = self.cfg
+        slots = np.asarray(slots, np.int64)
         if cfg.distribution == "deterministic" or cfg.jitter == 0.0:
-            return np.ones(n)
-        rng = np.random.default_rng(
-            np.random.SeedSequence([_LATENCY_STREAM, self.seed,
-                                    int(round_idx)]))
+            return np.ones(len(slots))
+        rngs = _slot_rngs(stream, self.seed, round_idx, slots, attempt)
         if cfg.distribution == "lognormal":
-            return np.exp(cfg.jitter * rng.standard_normal(n))
+            return np.exp(cfg.jitter
+                          * np.asarray([r.standard_normal() for r in rngs]))
         # heavy_tail: occasional extreme stalls (Pareto shape 1.5 has
         # infinite variance — exactly the regime where waiting for the max
         # is catastrophic but the k-th order statistic is tame)
-        return 1.0 + cfg.jitter * rng.pareto(1.5, size=n)
+        return 1.0 + cfg.jitter * np.asarray([r.pareto(1.5) for r in rngs])
 
-    def times(self, round_idx: int, n_windows: np.ndarray,
-              epochs: int) -> np.ndarray:
+    def times(self, round_idx: int, n_windows: np.ndarray, epochs: int,
+              slots=None) -> np.ndarray:
         """Simulated seconds from dispatch to server arrival, one per slot.
 
         ``n_windows``: per-client local window counts (the same per-client
-        sample counts that drive weighted aggregation).
+        sample counts that drive weighted aggregation).  ``slots``: the
+        clients' GLOBAL dispatch slots — the straggler draw is seeded per
+        ``(seed, round, slot)``, so it follows the client wherever it lands
+        in the dispatch ordering (defaults to ``arange``: positional).
         """
         n_windows = np.asarray(n_windows, np.float64)
+        if slots is None:
+            slots = np.arange(len(n_windows))
         base = (self.cfg.compute_s_per_window_epoch * n_windows * epochs
                 + self.uplink_s)
-        return base * self._multipliers(round_idx, len(n_windows))
+        return base * self._multipliers(round_idx, slots)
+
+    def dropouts(self, round_idx: int, slots, attempt: int = 0) -> np.ndarray:
+        """Mid-upload failure draws: True where the dispatched upload never
+        arrives.  Pure function of ``(seed, round, slot, attempt)`` —
+        ``attempt`` decorrelates a retry's fate from the original's."""
+        slots = np.asarray(slots, np.int64)
+        p = self.churn.dropout_prob
+        if p <= 0.0 or len(slots) == 0:
+            return np.zeros(len(slots), bool)
+        rngs = _slot_rngs(_DROPOUT_STREAM, self.seed, round_idx, slots,
+                          attempt)
+        return np.asarray([r.uniform() < p for r in rngs])
+
+    def available(self, round_idx: int, client_ids) -> np.ndarray:
+        """Membership availability mask for one round: False where the
+        member has (temporarily) left the fleet.  Pure function of
+        ``(seed, round, client id)``, so a client's join/leave schedule is
+        independent of who else is enrolled."""
+        client_ids = np.asarray(client_ids, np.int64)
+        p = self.churn.absent_prob
+        if p <= 0.0 or len(client_ids) == 0:
+            return np.ones(len(client_ids), bool)
+        rngs = _slot_rngs(_AVAIL_STREAM, self.seed, round_idx, client_ids)
+        return np.asarray([r.uniform() >= p for r in rngs])
+
+    def reupload_times(self, round_idx: int, slots,
+                       attempt: int = 1) -> np.ndarray:
+        """Simulated seconds for a RE-upload (retry of an abandoned update,
+        or a survivor's re-masked upload after a cohort re-key): the client
+        already holds its transformed delta, so the cost is uplink only,
+        times a fresh straggler draw on the re-upload stream."""
+        slots = np.asarray(slots, np.int64)
+        return self.uplink_s * self._multipliers(
+            round_idx, slots, stream=_REUPLOAD_STREAM, attempt=attempt)
 
 
 def link_budget(n_params: int, m_clients: int, n_regions: int,

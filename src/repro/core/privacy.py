@@ -148,6 +148,15 @@ class PrivacyAccountant:
         """Compose ``n`` further rounds (one per dispatch/flush)."""
         self.rounds += int(n)
 
+    def state_dict(self) -> Dict[str, int]:
+        """The accountant's only mutable state (JSON-serializable) — the
+        composition count; everything else is rebuilt from the configs on
+        resume (``checkpoint``/``fedavg.run_federated_training``)."""
+        return {"rounds": int(self.rounds)}
+
+    def load_state(self, state: Dict[str, int]) -> None:
+        self.rounds = int(state["rounds"])
+
     @property
     def total_rdp(self) -> np.ndarray:
         """Composed RDP per order after ``rounds`` rounds."""

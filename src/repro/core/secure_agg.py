@@ -60,6 +60,7 @@ demonstrates the cancellation algebra and its cost, not bit-level secrecy.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, ClassVar, NamedTuple
 
 import jax
@@ -73,6 +74,11 @@ PyTree = Any
 # indices: pair keys can never collide with the per-client transform keys
 # (which fold slot indices < m directly into the round key)
 _PAIR_DOMAIN = 0x5EC0A6
+# domain-separation tag for cohort RE-KEYS (dropout recovery): generation
+# g > 0 of a cohort's shared key is fold_in(fold_in(base, _REKEY_DOMAIN), g),
+# so a re-keyed cohort's masks can never collide with any dispatch round's
+# gen-0 masks (round indices fold directly into the seed key)
+_REKEY_DOMAIN = 0x2EC0DE
 
 
 class CohortContext(NamedTuple):
@@ -142,6 +148,33 @@ class PairwiseMasker:
         inv_w = jnp.where(w[i] > 0, 1.0 / jnp.maximum(w[i], 1e-30), 0.0)
         out = [real_i * (x + mk * inv_w) for x, mk in zip(leaves, masks)]
         return jax.tree.unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, static_argnames=("masker",))
+def mask_contribution(masker: PairwiseMasker, like: PyTree, slot, weights,
+                      round_key) -> PyTree:
+    """The mask-ONLY term of a masked upload: ``PairwiseMasker`` applied to
+    a zero delta, i.e. ``real_i * mask_i / w_i`` for dispatch slot ``slot``
+    under cohort weights ``weights`` and shared key ``round_key``.
+
+    This is the algebraic basis of Bonawitz-style dropout recovery without
+    the server ever holding a pre-mask delta: a survivor's re-keyed upload is
+
+        y_i' = y_i - mask_contribution(old_key, w_old)
+                   + mask_contribution(new_key, w_new)
+
+    where ``w_new`` zeroes the dropped slots.  The subtraction replays the
+    EXACT ops of the original masking (same scan, same pair keys), so the old
+    mask cancels to one float rounding per leaf, and the new masks cancel
+    over the surviving set in the weighted aggregate as usual.  ``like`` only
+    supplies shapes/dtypes.
+    """
+    ctx = CohortContext(jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(weights, jnp.float32), round_key)
+    zeros = jax.tree.map(jnp.zeros_like, like)
+    # the per-client key arg is unused by the masker (masks come from the
+    # shared round key), but the signature wants one
+    return masker(zeros, jax.random.PRNGKey(0), ctx)
 
 
 def make_masker(cfg: SecureAggConfig) -> PairwiseMasker:

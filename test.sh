@@ -36,4 +36,14 @@ if [ "$#" -eq 0 ]; then
     python benchmarks/bench_scalability.py \
       --clients 200 --rounds 3 --clients-per-round 8 --days 30 --smoke \
       --mode semi_sync --stragglers lognormal --over-select 1.5
+  # churn axis: nonzero dropout with secure-agg cohort re-key.  buffer_k is
+  # pinned to m' = ceil(1.5*8) = 12 (wait-for-cohort) because cohort-atomic
+  # folds at a k-th-arrival clock need >=4 rounds AND a full-cohort flush
+  # threshold to complete any fold in a smoke-sized run.
+  echo "== bench_scalability smoke (client churn + dropout, secure-agg re-key)"
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_scalability.py \
+      --clients 200 --rounds 4 --clients-per-round 8 --days 30 --smoke \
+      --mode semi_sync --stragglers lognormal --over-select 1.5 \
+      --buffer-k 12 --secure-agg --churn 0,0.2 --timeout-rounds 1
 fi

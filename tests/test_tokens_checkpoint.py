@@ -76,3 +76,39 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
     checkpoint.save(p, tree)
     with pytest.raises(ValueError):
         checkpoint.restore(p, {"w": jnp.zeros((5,))})
+
+
+def test_checkpoint_path_suffix_normalization(tmp_path):
+    """``np.savez`` appends ``.npz`` to suffix-less paths, so save and load
+    used to disagree about the file's name: ``save("ck")`` wrote ``ck.npz``
+    but ``restore("ck")`` looked for ``ck``.  Both now normalize the same
+    way, and an explicit ``.npz`` is never doubled."""
+    tree = {"w": jnp.arange(4.0)}
+    stem = tmp_path / "ck"
+    checkpoint.save(stem, tree, metadata={"round": 3})
+    assert (tmp_path / "ck.npz").exists()
+    assert not stem.exists()
+    out = checkpoint.restore(stem, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    assert checkpoint.metadata(stem) == {"round": 3}
+    # explicit .npz stays as-is (no ck.npz.npz)
+    checkpoint.save(tmp_path / "ck2.npz", tree)
+    assert (tmp_path / "ck2.npz").exists()
+    assert not (tmp_path / "ck2.npz.npz").exists()
+
+
+def test_checkpoint_metadata_key_collision_raises(tmp_path):
+    """A tree leaf named ``__metadata__`` would silently overwrite (or be
+    shadowed by) the metadata record in the flat archive."""
+    with pytest.raises(ValueError, match="__metadata__"):
+        checkpoint.save(tmp_path / "m.npz",
+                        {"__metadata__": jnp.zeros(2)})
+
+
+def test_checkpoint_separator_key_collision_raises(tmp_path):
+    """Two distinct tree paths that flatten to the same ``/``-joined key
+    (a dict key containing the separator) used to silently drop one of the
+    two leaves in the archive."""
+    tree = {"a": {"b": jnp.zeros(2)}, "a/b": jnp.ones(2)}
+    with pytest.raises(ValueError, match="a/b"):
+        checkpoint.save(tmp_path / "d.npz", tree)
