@@ -1,0 +1,23 @@
+"""``flcheck`` — static analysis for the federated pipeline's load-bearing
+invariants (see ``docs/static_analysis.md``).
+
+Two levels:
+
+* **Level 1 — jaxpr dataflow taint** (``analysis/taint.py``): trace the real
+  round bodies to jaxprs, taint the per-client delta values at their source,
+  and prove that no tainted value reaches a shard-boundary collective without
+  first flowing through every configured transform stage (clip -> noise ->
+  quantize -> mask).  Plus a jit recompile guard and an implicit host<->device
+  transfer check for the round hot path (``analysis/recompile.py``).
+* **Level 2 — AST lint** (``analysis/prng_lint.py``, ``determinism.py``,
+  ``dtypes.py``): PRNG hygiene (raw literal keys, key reuse, arithmetic seed
+  derivation), nondeterminism in ``core/``/``data/``, and dtype hazards in
+  ``core/``/``kernels/``.  Rule catalog + inline suppression syntax live in
+  ``analysis/rules.py``.
+
+CLI: ``python -m repro.analysis src/`` or ``tools/flcheck src/``.
+
+This package is import-light on purpose: ``repro.core`` modules import
+``repro.analysis.taint`` for the (production no-op) taint markers, so nothing
+here may import ``repro.core`` at module level.
+"""

@@ -1,0 +1,200 @@
+"""``flcheck`` command line: lint + taint + hot-path guards.
+
+Usage (from the repo root)::
+
+    tools/flcheck src/                      # level-2 AST lint (fast, no jax)
+    tools/flcheck --taint                   # level-1 jaxpr taint proofs
+    tools/flcheck --hot-path                # recompile + transfer guards
+    tools/flcheck --all src/                # everything CI runs
+    tools/flcheck --list-rules
+
+Exit status: 0 when every selected pass is clean (suppressed findings with a
+rationale are clean; ``disable`` comments WITHOUT a rationale are fatal),
+1 on any finding/violation, 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Iterable, List, Tuple
+
+from repro.analysis import determinism, dtypes, prng_lint
+from repro.analysis.rules import RULES, Finding, Suppressions, relpath
+
+_CHECKERS = (prng_lint.check_source, determinism.check_source,
+             dtypes.check_source)
+
+
+def _iter_py(paths: Iterable[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in ("__pycache__", ".git"))
+                for f in sorted(filenames):
+                    if f.endswith(".py"):
+                        yield os.path.join(dirpath, f)
+
+
+def find_repo_root(start: str) -> str:
+    """Nearest ancestor holding a ``.git`` or ``pyproject.toml`` — rule
+    scopes are keyed on repo-relative paths like ``src/repro/core/``."""
+    d = os.path.abspath(start)
+    while True:
+        if any(os.path.exists(os.path.join(d, m))
+               for m in (".git", "pyproject.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return os.path.abspath(start)
+        d = parent
+
+
+def lint_file(path: str, root: str) -> Tuple[List[Finding], List[str]]:
+    """All level-2 findings for one file, plus fatal suppression-syntax
+    errors (``disable`` without a rationale)."""
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    rel = relpath(path, root)
+    try:
+        findings = [f for check in _CHECKERS for f in check(source, rel)]
+    except SyntaxError as e:
+        return [Finding("FLC000", rel, e.lineno or 0,
+                        f"syntax error: {e.msg}")], []
+    findings = [f for f in findings if RULES[f.code].in_scope(rel)]
+    errors = [f"{rel}:{ln}: flcheck disable without a (rationale) — "
+              "suppressions must say why"
+              for ln in Suppressions(source).missing_reason]
+    return findings, errors
+
+
+def run_lint(paths: List[str], root: str, show_suppressed: bool = False
+             ) -> int:
+    n_files = 0
+    fatal: List[str] = []
+    suppressed: List[Finding] = []
+    for path in _iter_py(paths):
+        n_files += 1
+        findings, errors = lint_file(path, root)
+        fatal.extend(errors)
+        for f in findings:
+            if f.suppressed:
+                suppressed.append(f)
+            else:
+                fatal.append(f.render())
+    for line in fatal:
+        print(line)
+    if show_suppressed:
+        for f in suppressed:
+            print(f.render())
+    print(f"flcheck lint: {n_files} files, {len(fatal)} findings, "
+          f"{len(suppressed)} suppressed")
+    return 1 if fatal else 0
+
+
+def run_taint(quick: bool = False) -> int:
+    """Prove sanitize-before-boundary on the real round bodies.
+
+    Configs x topologies: the full transform+secure stack must carry all
+    four labels to every boundary; a clip-only config must carry ``clip``.
+    ``quick`` limits to the vmap topology (no mesh setup) for the test.sh
+    smoke.
+    """
+    from repro.analysis import taint
+    from repro.configs.base import SecureAggConfig, TransformConfig
+
+    full_t = TransformConfig(clip_norm=1.0, noise_multiplier=0.5,
+                             quantize_bits=4)
+    cases = [("vmap", full_t, SecureAggConfig(enabled=True)),
+             ("vmap", TransformConfig(clip_norm=1.0), None),
+             ("semi_sync", full_t, SecureAggConfig(enabled=True))]
+    if not quick:
+        import jax
+        n_dev = len(jax.devices())
+        cases += [("flat", full_t, SecureAggConfig(enabled=True)),
+                  ("flat", TransformConfig(clip_norm=1.0), None)]
+        if n_dev >= 2 and n_dev % 2 == 0:
+            cases.append(("hier", full_t, SecureAggConfig(enabled=True)))
+        else:
+            print(f"flcheck taint: skipping hier topology "
+                  f"({n_dev} devices; need an even count >= 2)")
+    rc = 0
+    for topo, tcfg, scfg in cases:
+        report = taint.verify_pipeline(topo, tcfg, scfg)
+        label = f"[{topo}] required={sorted(report.required)}"
+        if report.proved:
+            print(f"flcheck taint OK {label}: sources={report.sources} "
+                  f"tainted-crossings={report.checked}")
+        else:
+            rc = 1
+            print(f"flcheck taint FAILED {label}:")
+            print("  " + report.render().replace("\n", "\n  "))
+    return rc
+
+
+def run_hot_path() -> int:
+    from repro.analysis import recompile
+
+    report, transfer_err = recompile.check_round_hot_path()
+    print("flcheck hot-path: " + report.render())
+    rc = 0 if report.ok else 1
+    if transfer_err is None:
+        print("flcheck hot-path: transfer guard OK (no implicit "
+              "host<->device transfers after warm-up)")
+    else:
+        rc = 1
+        print("flcheck hot-path: transfer guard FAILED: " + transfer_err)
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="flcheck",
+        description="Static + dataflow analysis for the federated pipeline "
+                    "(see docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="*", help="files/dirs to lint "
+                    "(default: src/ under the repo root)")
+    ap.add_argument("--taint", action="store_true",
+                    help="run the jaxpr taint proofs on the round bodies")
+    ap.add_argument("--quick-taint", action="store_true",
+                    help="vmap-only taint proof (fast smoke)")
+    ap.add_argument("--hot-path", action="store_true",
+                    help="run the recompile + transfer guards (slow)")
+    ap.add_argument("--all", action="store_true",
+                    help="lint + taint + hot-path")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint (with --taint/--hot-path)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print suppressed findings with rationales")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES.values():
+            scope = ", ".join(rule.scope) if rule.scope else "everywhere"
+            print(f"{rule.code} {rule.name} [{scope}]\n    {rule.summary}")
+        return 0
+
+    root = find_repo_root(args.paths[0] if args.paths else os.getcwd())
+    paths = args.paths or [os.path.join(root, "src")]
+    do_taint = args.taint or args.quick_taint or args.all
+    do_hot = args.hot_path or args.all
+    do_lint = not args.no_lint or not (do_taint or do_hot)
+
+    rc = 0
+    if do_lint:
+        rc |= run_lint(paths, root, show_suppressed=args.show_suppressed)
+    if do_taint:
+        rc |= run_taint(quick=args.quick_taint and not (args.taint
+                                                        or args.all))
+    if do_hot:
+        rc |= run_hot_path()
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,151 @@
+"""FLC005 — dtype-hazard lint for transform and kernel code.
+
+Scope (see ``rules.py``): ``src/repro/core/`` and ``src/repro/kernels/``.
+The delta-transform stack and the Pallas cells are the numerically
+load-bearing device code: quantization grids, DP noise scales, mask
+cancellation and kernel-vs-reference parity are all pinned at float32
+tolerance, so silent precision changes break real guarantees.  Host-side
+numpy fp64 (metric accumulators, history arrays) is fine and NOT flagged —
+the rules below target the jnp/device path only.
+
+Flagged constructs:
+
+* ``jnp.float64`` (attribute, ``astype``, or ``dtype="float64"`` in a jnp
+  call) — with jax's default x64-disabled config this silently truncates to
+  f32; with x64 enabled it doubles the wire/bench byte counts the latency
+  model charges.  Either behavior is a trap; be explicit with f32.
+* arithmetic directly on values cast to a narrow int (``astype(jnp.int8)
+  + ...``) — int8 wraps at ±127; quantized-delta math must accumulate in
+  int32/float and cast at the wire boundary.
+* a narrowing ``.astype(...)`` feeding a contraction (``einsum``/``dot``/
+  ``matmul``) that has no ``preferred_element_type`` — accumulating in the
+  narrowed dtype loses the fp32-accumulation guarantee the Pallas kernels
+  make (they all pass ``preferred_element_type=jnp.float32``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.rules import Finding, Suppressions
+
+__all__ = ["check_source"]
+
+_CONTRACTIONS = frozenset({"einsum", "dot", "matmul", "dot_general",
+                           "tensordot"})
+_NARROW_INTS = frozenset({"int8", "uint8", "int16", "uint16"})
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _dtype_token(node: ast.AST) -> Optional[str]:
+    """'jnp.float64' -> 'float64', "int8" -> 'int8', else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    name = _dotted(node)
+    if name and "." in name:
+        mod, last = name.rsplit(".", 1)
+        if mod in ("jnp", "np", "numpy", "jax.numpy"):
+            return last
+    return None
+
+
+def _is_narrow_int_cast(node: ast.AST) -> bool:
+    """x.astype(jnp.int8) / jnp.asarray(x, jnp.int8)-style expression."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = _dotted(node.func) or ""
+    if name.endswith(".astype") or isinstance(node.func, ast.Attribute) and \
+            node.func.attr == "astype":
+        args = node.args + [kw.value for kw in node.keywords]
+        return any(_dtype_token(a) in _NARROW_INTS for a in args)
+    if name.rsplit(".", 1)[-1] in ("asarray", "array", "full", "zeros",
+                                   "ones"):
+        args = node.args + [kw.value for kw in node.keywords]
+        return any(_dtype_token(a) in _NARROW_INTS for a in args)
+    return False
+
+
+def _is_downcast_astype(node: ast.AST) -> bool:
+    """x.astype(v.dtype) / x.astype(jnp.bfloat16): a cast to a (possibly)
+    narrower dtype — hazardous as a contraction operand."""
+    if not (isinstance(node, ast.Call) and isinstance(node.func,
+                                                      ast.Attribute)
+            and node.func.attr == "astype" and node.args):
+        return False
+    arg = node.args[0]
+    tok = _dtype_token(arg)
+    if tok in ("bfloat16", "float16") or tok in _NARROW_INTS:
+        return True
+    # .astype(other.dtype): target dtype unknown at lint time -> hazard
+    return isinstance(arg, ast.Attribute) and arg.attr == "dtype"
+
+
+class _Lint(ast.NodeVisitor):
+    def __init__(self, rel: str, sup: Suppressions):
+        self.rel, self.sup = rel, sup
+        self.findings: List[Finding] = []
+
+    def _emit(self, line: int, msg: str) -> None:
+        self.findings.append(self.sup.apply("FLC005", self.rel, line, msg))
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        name = _dotted(node)
+        if name in ("jnp.float64", "jax.numpy.float64"):
+            self._emit(node.lineno,
+                       "jnp.float64 on the device path — silently truncates "
+                       "to f32 unless x64 is enabled (and doubles wire "
+                       "bytes when it is); use explicit float32")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func) or ""
+        last = name.rsplit(".", 1)[-1]
+        # dtype="float64" in a jnp call
+        if name.startswith(("jnp.", "jax.numpy.")):
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _dtype_token(kw.value) in \
+                        ("float64", "f8"):
+                    self._emit(node.lineno,
+                               f"dtype=float64 in {name}() — device code "
+                               "must stay f32 (x64 silently off by "
+                               "default)")
+        # narrowing cast feeding a contraction without fp32 accumulation
+        if last in _CONTRACTIONS:
+            has_pet = any(kw.arg == "preferred_element_type"
+                          for kw in node.keywords)
+            if not has_pet and any(_is_downcast_astype(a)
+                                   for a in node.args):
+                self._emit(node.lineno,
+                           f"narrowing astype feeding {last}() without "
+                           "preferred_element_type — the contraction "
+                           "accumulates in the narrowed dtype; pass "
+                           "preferred_element_type=jnp.float32")
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub, ast.Mult)) and (
+                _is_narrow_int_cast(node.left)
+                or _is_narrow_int_cast(node.right)):
+            self._emit(node.lineno,
+                       "arithmetic on a narrow-int cast — int8/int16 wrap "
+                       "silently; accumulate in int32/float and cast at "
+                       "the wire boundary")
+        self.generic_visit(node)
+
+
+def check_source(source: str, rel: str) -> List[Finding]:
+    """Run the dtype-hazard rule over one module's source."""
+    tree = ast.parse(source)
+    lint = _Lint(rel, Suppressions(source))
+    lint.visit(tree)
+    return lint.findings

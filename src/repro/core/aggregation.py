@@ -50,6 +50,7 @@ from typing import Any, Optional, Protocol, Tuple, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import taint
 from repro.configs.base import AGGREGATORS, AggregationConfig, FLConfig
 
 PyTree = Any
@@ -88,7 +89,9 @@ class LocalAggregator:
         return None
 
     def reduce(self, x):
-        return x
+        # identity collective, but still THE cross-client boundary of the
+        # vmap path — flcheck checks sanitization here (production no-op)
+        return taint.boundary(x)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +107,7 @@ class FlatAggregator:
         return P(self.client_axis)
 
     def reduce(self, x):
-        return jax.lax.psum(x, self.client_axis)
+        return jax.lax.psum(taint.boundary(x), self.client_axis)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,7 +129,8 @@ class HierarchicalAggregator:
         return P((self.region_axis, self.client_axis))
 
     def reduce(self, x):
-        regional = jax.lax.psum(x, self.client_axis)    # edge -> region
+        regional = jax.lax.psum(taint.boundary(x),
+                                self.client_axis)        # edge -> region
         return jax.lax.psum(regional, self.region_axis)  # region -> cloud
 
 

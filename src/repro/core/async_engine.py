@@ -69,6 +69,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import taint as taint_mod
 from repro.configs.base import (AggregationConfig, AsyncConfig,
                                 ForecasterConfig, SecureAggConfig,
                                 TransformConfig)
@@ -120,12 +121,16 @@ def client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
     locals_, client_loss = jax.vmap(
         local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
         params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
+    # taint source (production no-op); the returned deltas ARE the uploads
+    # the server's straggler buffer holds, so the exit of this function is
+    # the shard boundary flcheck checks on the semi-sync fold path
+    locals_ = taint_mod.tag_private(locals_)
     deltas = jax.tree.map(lambda l, g: l - g, locals_, params)
     stack = transforms_mod.make_stack(tcfg, scfg)
     if not stack.is_identity:
         deltas = fedavg_mod.apply_stack(stack, deltas, keys, slots=slots,
                                         w_full=w_full, round_key=round_key)
-    return deltas, client_loss
+    return taint_mod.boundary(deltas), client_loss
 
 
 @functools.lru_cache(maxsize=None)

@@ -19,7 +19,9 @@ def kmeans(x: np.ndarray, k: int, *, n_iter: int = 100, seed: int = 0,
     """
     best = None
     for init in range(n_init):
-        rng = np.random.default_rng(seed + init)
+        # SeedSequence([seed, init]) mixes injectively; seed + init collides
+        # across (seed, init) pairs and correlates neighbouring seeds
+        rng = np.random.default_rng(np.random.SeedSequence([seed, init]))
         cents = _kmeanspp(x, k, rng)
         assign = np.zeros(x.shape[0], np.int64)
         for _ in range(n_iter):

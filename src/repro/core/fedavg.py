@@ -57,6 +57,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import checkpoint as checkpoint_mod
+from repro.analysis import taint as taint_mod
 from repro.configs.base import (AggregationConfig, FLConfig, ForecasterConfig,
                                 SecureAggConfig, TransformConfig)
 from repro.core import aggregation as aggregation_mod
@@ -248,6 +249,12 @@ def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
     locals_, client_loss = jax.vmap(
         local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
         params, x, y, batch_idx, lr, cfg, loss, cell_impl, prox_mu)
+    # taint source (production no-op): per-client local models — and the
+    # deltas derived from them — are the private values flcheck tracks to
+    # the aggregation boundary.  client_loss is deliberately NOT tagged:
+    # the weighted scalar loss release is the accepted disclosure
+    # documented in docs/privacy.md.
+    locals_ = taint_mod.tag_private(locals_)
     stack = transforms_mod.make_stack(tcfg, scfg)
     if stack.is_identity:
         sums, wsum_local = _weighted_sums(locals_, weights)
@@ -353,7 +360,7 @@ class RoundEngine:
     so round logic is unit-testable without running full training::
 
         engine = RoundEngine(fcfg, flcfg)          # or mesh=mesh
-        params, state = engine.init(jax.random.PRNGKey(0))
+        params, state = engine.init(jax.random.PRNGKey(flcfg.seed))
         sel = engine.select(rng, members, m, round_idx, member_weights)
         params, state, loss = engine.step(params, state, x[sel], y[sel],
                                           bidx, counts[sel], round_idx)
@@ -761,7 +768,10 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         checkpoint_mod.save(checkpoint_path, tree, metadata=meta)
 
     for cid, members in groups.items():
-        key = jax.random.PRNGKey(flcfg.seed + (cid if cid >= 0 else 0))
+        # fold_in, NOT PRNGKey(seed + cid): additive seeds collide across
+        # runs ((seed, cid+1) == (seed+1, cid) would share every init draw)
+        key = jax.random.fold_in(jax.random.PRNGKey(flcfg.seed),
+                                 cid if cid >= 0 else 0)
         params, sstate = engine.init(key)
         engine.reset_pacing()          # per-cluster event clock + buffer
         hist, sim_hist, eps_hist = [], [], []

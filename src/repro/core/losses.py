@@ -102,7 +102,8 @@ def chunked_weighted_ce(h, w_head, labels, beta: float = 1.0, mask=None,
     @jax.checkpoint
     def one(args):
         hcc, lcc, mcc = args
-        logits = jnp.einsum("bsd,dv->bsv", hcc, w_head.astype(hcc.dtype))
+        logits = jnp.einsum("bsd,dv->bsv", hcc, w_head.astype(hcc.dtype),
+                            preferred_element_type=jnp.float32)
         from repro.sharding import constrain
         logits = constrain(logits, "batch", None, "act_vocab")
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)

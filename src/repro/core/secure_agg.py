@@ -66,6 +66,7 @@ from typing import Any, ClassVar, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import taint
 from repro.configs.base import SecureAggConfig
 
 PyTree = Any
@@ -147,7 +148,8 @@ class PairwiseMasker:
         real_i = (w[i] > 0).astype(jnp.float32)
         inv_w = jnp.where(w[i] > 0, 1.0 / jnp.maximum(w[i], 1e-30), 0.0)
         out = [real_i * (x + mk * inv_w) for x, mk in zip(leaves, masks)]
-        return jax.tree.unflatten(treedef, out)
+        # taint marker (production no-op): this stage's flcheck label
+        return taint.declassify(jax.tree.unflatten(treedef, out), "mask")
 
 
 @functools.partial(jax.jit, static_argnames=("masker",))
@@ -173,8 +175,9 @@ def mask_contribution(masker: PairwiseMasker, like: PyTree, slot, weights,
                         jnp.asarray(weights, jnp.float32), round_key)
     zeros = jax.tree.map(jnp.zeros_like, like)
     # the per-client key arg is unused by the masker (masks come from the
-    # shared round key), but the signature wants one
-    return masker(zeros, jax.random.PRNGKey(0), ctx)
+    # shared round key), but the signature wants one — feed it the round key
+    # itself rather than forking an unrelated literal stream
+    return masker(zeros, round_key, ctx)
 
 
 def make_masker(cfg: SecureAggConfig) -> PairwiseMasker:

@@ -52,6 +52,7 @@ from typing import Any, ClassVar, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import taint
 from repro.configs.base import SecureAggConfig, TransformConfig
 
 PyTree = Any
@@ -86,7 +87,9 @@ class L2Clip:
     def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
         norm = global_l2_norm(delta)
         factor = jnp.minimum(1.0, self.clip_norm / jnp.maximum(norm, 1e-12))
-        return jax.tree.map(lambda x: x * factor, delta)
+        # taint marker (production no-op): this stage's flcheck label
+        return taint.declassify(jax.tree.map(lambda x: x * factor, delta),
+                                "clip")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +103,8 @@ class GaussianNoise:
         keys = jax.random.split(key, len(leaves))
         noised = [x + self.sigma * jax.random.normal(k, x.shape, x.dtype)
                   for x, k in zip(leaves, keys)]
-        return jax.tree.unflatten(treedef, noised)
+        # taint marker (production no-op): this stage's flcheck label
+        return taint.declassify(jax.tree.unflatten(treedef, noised), "noise")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,7 +130,8 @@ class StochasticQuantize:
             u = jax.random.uniform(k, x.shape)
             q = jnp.clip(jnp.floor(x / safe + u), -levels, levels)
             out.append((q * safe).astype(x.dtype))
-        return jax.tree.unflatten(treedef, out)
+        # taint marker (production no-op): this stage's flcheck label
+        return taint.declassify(jax.tree.unflatten(treedef, out), "quantize")
 
 
 @dataclasses.dataclass(frozen=True)

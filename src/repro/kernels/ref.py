@@ -44,5 +44,6 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
             mask &= j > i - window
         s = jnp.where(mask[None, :, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bskgt,btkh->bskgh", w.astype(v.dtype), v)
+    o = jnp.einsum("bskgt,btkh->bskgh", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(v.dtype)
     return o.reshape(B, S, Hq, hd)

@@ -58,9 +58,9 @@ def main():
         days=args.days)
     norm, stats = windows.minmax_normalize(held)
     reqs = norm[:, -fcfg.lookback:]                      # most recent 2 h
-    t0 = time.time()
+    t0 = time.perf_counter()
     fc = serve_forecaster(res.params, fcfg, reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     lo, hi = stats
     kwh = fc * np.maximum(hi - lo, 1e-9) + lo
     print(f"[serve] {args.requests} forecasts in {dt*1e3:.1f} ms "

@@ -64,7 +64,7 @@ def main():
         server_opt=args.server_opt, server_lr=args.server_lr,
         prox_mu=args.prox_mu, sampling=args.sampling)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     print(f"[train] generating {args.clients} train buildings ({args.state})")
     train_series = synthetic.generate_buildings(
         args.state, list(range(args.clients)), days=args.days)
@@ -105,7 +105,7 @@ def main():
                   f"  per-horizon={np.round(v['per_horizon_accuracy'], 1)}")
         else:
             print(f"  {k}: {v:.2f}")
-    print(f"[train] total {time.time() - t0:.0f}s")
+    print(f"[train] total {time.perf_counter() - t0:.0f}s")
     if args.out:
         clean = {k: ({kk: (vv.tolist() if hasattr(vv, 'tolist') else vv)
                       for kk, vv in v.items()} if isinstance(v, dict) else v)

@@ -14,6 +14,13 @@ set -euo pipefail
 cd "$(dirname "$0")"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# flcheck smoke first: AST lint over src/ + vmap taint proof that no raw
+# client delta reaches the aggregation boundary unsanitized — fails fast
+# before the (slower) pytest run.  Full topology matrix: tools/flcheck --all
+echo "== flcheck smoke (lint + quick taint proof)"
+tools/flcheck --quick-taint src/
+
 python -m pytest -q "$@"
 
 # Default run also smokes the streaming client-window path (1 round over a

@@ -1,0 +1,12 @@
+"""Fixture: raw literal PRNG keys — triggers FLC001 and nothing else."""
+import jax
+
+
+def init_model():
+    key = jax.random.PRNGKey(0)            # FLC001
+    return jax.random.normal(key, (4,))
+
+
+def other_stream():
+    k = jax.random.key(42)                 # FLC001 (new-style key API)
+    return jax.random.uniform(k, (2,))

@@ -1,0 +1,15 @@
+"""Fixture: key reuse — triggers FLC002 and nothing else."""
+import jax
+
+
+def double_draw(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))      # FLC002: key already consumed
+    return a + b
+
+
+def loop_draw(key, n):
+    out = []
+    for _ in range(n):
+        out.append(jax.random.normal(key, (2,)))   # FLC002: same bits/iter
+    return out

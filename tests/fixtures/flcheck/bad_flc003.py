@@ -1,0 +1,11 @@
+"""Fixture: arithmetic seed derivation — triggers FLC003 and nothing else."""
+import jax
+import numpy as np
+
+
+def per_client_key(seed, cid):
+    return jax.random.PRNGKey(seed + cid)  # FLC003: (s, 1) == (s+1, 0)
+
+
+def per_init_rng(seed, init):
+    return np.random.default_rng(seed * 100 + init)   # FLC003

@@ -1,0 +1,27 @@
+"""Fixture: nondeterminism in replay-critical code — triggers FLC004 only.
+
+The FLC004 rule is scoped to ``src/repro/core/`` + ``src/repro/data/``;
+tests feed this file to the checker under a pretend path in that scope.
+"""
+import time
+
+import numpy as np
+
+
+def event_timestamp():
+    return time.time()                     # FLC004: wall clock
+
+
+def jitter_draw():
+    return np.random.normal()              # FLC004: global numpy rng
+
+
+def stable_tag(name):
+    return hash(name) % 1000               # FLC004: salted builtin hash
+
+
+def collect(members):
+    out = []
+    for m in set(members):                 # FLC004: unordered iteration
+        out.append(m)
+    return out

@@ -1,0 +1,23 @@
+"""Fixture: dtype hazards — triggers FLC005 and nothing else.
+
+Scoped like FLC004: tests feed this under a pretend ``src/repro/core/``
+path.
+"""
+import jax.numpy as jnp
+
+
+def promote(x):
+    return x.astype(jnp.float64)           # FLC005: fp64 on device path
+
+
+def alloc(n):
+    return jnp.zeros((n,), dtype="float64")    # FLC005: fp64 alloc
+
+
+def wrap_prone(x, y):
+    return x.astype(jnp.int8) + y          # FLC005: narrow-int arithmetic
+
+
+def low_precision_contract(a, b):
+    return jnp.einsum("ij,jk->ik", a.astype(b.dtype), b)   # FLC005: no
+    #                                      # preferred_element_type

@@ -1,0 +1,66 @@
+"""Fixture: idiomatic code that must produce ZERO findings under every rule.
+
+Exercises the sanctioned counterparts of each bad fixture: fold_in/split
+derivation, SeedSequence mixing, per-iteration key refresh, comprehension
+key zips, perf_counter timing, Generator rng, sorted iteration, fp32
+contractions with explicit accumulation dtype.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def derived_key(cfg_key, cid):
+    return jax.random.fold_in(cfg_key, cid)
+
+
+def split_draws(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    return a + b
+
+
+def rebind_draws(key):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, (4,))
+    key, sub = jax.random.split(key)       # rebind clears consumption
+    b = jax.random.normal(sub, (4,))
+    return a + b
+
+
+def loop_draws(key, n):
+    out = []
+    for i in range(n):
+        key, sub = jax.random.split(key)   # per-iteration refresh
+        out.append(jax.random.normal(sub, (2,)))
+    return out
+
+
+def zipped_draws(key, leaves):
+    ks = jax.random.split(key, len(leaves))
+    return [x + jax.random.normal(k, x.shape) for x, k in zip(leaves, ks)]
+
+
+def seeded_rng(seed, init):
+    return np.random.default_rng(np.random.SeedSequence([seed, init]))
+
+
+def bench_timing():
+    t0 = time.perf_counter()               # perf_counter is fine anywhere
+    return time.perf_counter() - t0
+
+
+def ordered_members(members):
+    return [m for m in sorted(set(members))]
+
+
+def f32_contract(a, b):
+    return jnp.einsum("ij,jk->ik", a.astype(b.dtype), b,
+                      preferred_element_type=jnp.float32)
+
+
+def host_metrics(err):
+    return np.asarray(err, np.float64)     # host-side fp64 is legitimate

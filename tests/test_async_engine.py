@@ -16,9 +16,13 @@ from repro.data import synthetic
 
 FCFG = ForecasterConfig(cell="lstm", hidden_dim=8)
 
-# same golden workload + constants as tests/test_pipeline_api.py: loss
-# histories captured at the pre-pipeline engine (PR 2 HEAD, commit 8487b52)
-GOLDEN = [0.1629043072462082, 0.07065977156162262, 0.042509667575359344]
+# same golden workload + constants as tests/test_pipeline_api.py — vmap and
+# shard_map pins re-captured for the fold_in engine-init key (the two paths
+# differ by one f32 ulp of summation order on these values; see the
+# GOLDEN comment in tests/test_pipeline_api.py)
+GOLDEN = [0.12595632672309875, 0.055874377489089966, 0.04063640534877777]
+GOLDEN_SHARD = [0.12595631182193756, 0.055874377489089966,
+                0.04063640907406807]
 
 
 def _workload(**kw):
@@ -170,9 +174,9 @@ def test_semi_sync_wait_for_all_zero_jitter_equals_sync_shard_map():
                                            mesh=mesh)[-1]
     np.testing.assert_array_equal(r_sync.loss_history, r_semi.loss_history)
     jax.tree.map(np.testing.assert_array_equal, r_sync.params, r_semi.params)
-    # and the shard_map semi-sync run equals the vmap golden pin
+    # and the shard_map semi-sync run equals the shard_map golden pin
     np.testing.assert_array_equal(r_semi.loss_history,
-                                  np.asarray(GOLDEN, np.float64))
+                                  np.asarray(GOLDEN_SHARD, np.float64))
 
 
 # ------------------------------------------------------- buffered path

@@ -13,8 +13,9 @@ from repro.data import synthetic
 
 FCFG = ForecasterConfig(cell="lstm", hidden_dim=8)
 
-# same golden workload as tests/test_async_engine.py (PR 2 HEAD pins)
-GOLDEN = [0.1629043072462082, 0.07065977156162262, 0.042509667575359344]
+# same golden workload as tests/test_async_engine.py (vmap-path pin,
+# re-captured for the fold_in engine-init key — see tests/test_pipeline_api.py)
+GOLDEN = [0.12595632672309875, 0.055874377489089966, 0.04063640534877777]
 
 
 def _workload(**kw):

@@ -308,13 +308,21 @@ def test_full_pipeline_round_runs_and_is_finite(fl_data):
 
 
 # ------------------------------------------------- bit-identity regression
-# Golden loss histories captured at the pre-pipeline engine (PR 2 HEAD,
-# commit 8487b52) for FLConfig defaults on this exact tiny workload; the
-# pipeline engine with the identity transform stack must reproduce them
-# bit-for-bit on BOTH execution paths.
-GOLDEN = [0.1629043072462082, 0.07065977156162262, 0.042509667575359344]
-GOLDEN_FEDADAM = [0.15886008739471436, 0.1162903904914856,
-                  0.07563479989767075]
+# Golden loss histories for FLConfig defaults on this exact tiny workload,
+# re-pinned when the engine-init key derivation moved from
+# PRNGKey(seed + cid) to fold_in(PRNGKey(seed), cid) (flcheck FLC003:
+# additive seeds collide across (seed, cid) pairs).  Each execution path
+# must reproduce its pin bit-for-bit.  The vmap and shard_map pins differ
+# in rounds 1 and 3 by one f32 ulp: the vmap path sums the 4 selected
+# clients sequentially while the 8-shard psum reduces in tree order, and
+# with these init values the two roundings no longer coincide (they
+# happened to, bitwise, for the pre-fold_in values — summation ORDER is
+# the only difference, pinned per path below).
+GOLDEN = [0.12595632672309875, 0.055874377489089966, 0.04063640534877777]
+GOLDEN_SHARD = [0.12595631182193756, 0.055874377489089966,
+                0.04063640907406807]
+GOLDEN_FEDADAM = [0.1233379915356636, 0.08418796956539154,
+                  0.052974801510572433]
 
 
 def _golden_workload():
@@ -339,7 +347,7 @@ def test_default_config_loss_history_bit_identical_shard_map():
     mesh = jax.make_mesh((8,), ("clients",))
     res = fedavg.run_federated_training(series, FCFG, flcfg, mesh=mesh)[-1]
     np.testing.assert_array_equal(res.loss_history,
-                                  np.asarray(GOLDEN, np.float64))
+                                  np.asarray(GOLDEN_SHARD, np.float64))
 
 
 def test_engine_options_loss_history_bit_identical():
