@@ -16,6 +16,9 @@ Sections:
                common target loss + held-out MAPE
   edge         §5.5 (edge-cluster envelope, simulated + per-level link
                budgets)
+  serving      §5.4 deployment path: forecasts/s + p50/p99 latency of the
+               padded-bucket serving engine under a replayed Poisson trace,
+               fp32 vs int8 weights, cluster routing + mid-replay hot-swap
   kernels      Pallas kernels vs references
   roofline     §Roofline table from the dry-run artifacts
 """
@@ -28,7 +31,7 @@ import traceback
 from benchmarks import (bench_beta, bench_clustering, bench_edge,
                         bench_ew_ce, bench_ewmse, bench_kernels,
                         bench_lstm_vs_gru, bench_roofline,
-                        bench_scalability)
+                        bench_scalability, bench_serving)
 
 def _scaling_pipeline():
     """Client-count axis under the full pipeline: DP clip + noise + int8
@@ -50,6 +53,7 @@ SECTIONS = [
     ("kernels", bench_kernels.main),
     ("roofline", bench_roofline.main),
     ("edge", bench_edge.main),
+    ("serving", bench_serving.main),
     ("clustering", bench_clustering.main),
     ("ewmse", bench_ewmse.main),
     ("ew_ce_transfer", bench_ew_ce.main),

@@ -1,11 +1,15 @@
-"""Batched-request serving demo (deliverable b, serving kind).
+"""Batched-request serving demo — a thin client of ``repro.serving``.
 
-Fits a small FL model, then serves batched next-hour forecast requests for
-hundreds of unseen consumers — the micro-grid provider's inference path
-(paper §5.4: deploy to clients with no compute for training).
+Fits a small FL model, publishes it into the serving registry, and replays
+next-hour forecast requests for hundreds of unseen consumers through the
+padded-bucket batching engine (paper §5.4: deploy to clients with no
+compute for training).  Raw watt-hours in, kWh out; ``--clusters k`` routes
+each unseen consumer to its nearest-centroid cluster model, ``--int8``
+serves quantized weights.
 
   PYTHONPATH=src python examples/serve_forecaster.py
   PYTHONPATH=src python examples/serve_forecaster.py --requests 1024
+  PYTHONPATH=src python examples/serve_forecaster.py --clusters 3 --int8
 """
 from repro.launch import serve
 

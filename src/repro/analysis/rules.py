@@ -53,12 +53,14 @@ RULES: Dict[str, Rule] = {r.code: r for r in (
          "global numpy/stdlib rng state, builtin hash, unordered-set "
          "iteration) — rounds must be pure functions of "
          "(seed, round, slot, attempt)",
-         scope=("src/repro/core/", "src/repro/data/")),
+         scope=("src/repro/core/", "src/repro/data/",
+                "src/repro/serving/")),
     Rule("FLC005", "dtype-hazard",
          "dtype hazard (fp64 promotion on the device path, arithmetic in a "
          "narrow int type, accumulation-precision downcast) in transform/"
          "kernel code",
-         scope=("src/repro/core/", "src/repro/kernels/")),
+         scope=("src/repro/core/", "src/repro/kernels/",
+                "src/repro/serving/")),
 )}
 
 

@@ -19,8 +19,12 @@ Format notes:
 """
 from __future__ import annotations
 
+import glob as _glob
 import json
+import os
+import zipfile
 from pathlib import Path
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,14 +72,23 @@ def _flatten(tree):
 
 
 def save(path, tree, metadata=None):
-    """Write a pytree checkpoint to ``path`` (.npz appended if missing)."""
+    """Write a pytree checkpoint to ``path`` (.npz appended if missing).
+
+    The write is ATOMIC (tmp file + ``os.replace``): a concurrent reader —
+    e.g. a serving registry polling this path for new generations — sees
+    either the previous complete checkpoint or the new one, never a
+    half-written archive.
+    """
     path = _normalize(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
     if metadata is not None:
         flat[_META_KEY] = np.frombuffer(
             json.dumps(metadata).encode(), dtype=np.uint8)
-    np.savez(path, **flat)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:           # savez on a handle keeps the name
+        np.savez(f, **flat)
+    os.replace(tmp, path)
 
 
 def load_arrays(path):
@@ -126,3 +139,43 @@ def restore(path, like):
 
 def metadata(path):
     return load_arrays(path)[1]
+
+
+# ---------------------------------------------------------- publish polling
+def generation(path) -> int:
+    """Publish generation of a checkpoint, from metadata ALONE — npz members
+    load lazily, so this never touches the (potentially large) arrays.
+
+    Priority: an explicit ``metadata["generation"]`` (what the FL driver
+    stamps — its global executed-round counter, monotone across clusters),
+    falling back to ``rounds_done`` for older snapshots; -1 when the
+    checkpoint carries neither (or no metadata at all).
+    """
+    data = np.load(_normalize(path), allow_pickle=False)
+    if _META_KEY not in data.files:
+        return -1
+    meta = json.loads(bytes(data[_META_KEY]).decode())
+    g = meta.get("generation", meta.get("rounds_done"))
+    return -1 if g is None else int(g)
+
+
+def latest(path_glob) -> Optional[Tuple[Path, int]]:
+    """``(path, generation)`` of the highest-generation checkpoint matching
+    the glob; ``None`` when nothing (readable) matches.
+
+    Metadata-only reads (see :func:`generation`) make this cheap enough to
+    poll every few seconds even with multi-GB archives behind the glob.
+    Unreadable files are skipped, not fatal — with non-atomic writers a
+    half-written archive may transiently match the glob.  Ties break toward
+    the lexicographically LAST path so concurrent pollers agree.
+    """
+    best: Optional[Tuple[Path, int]] = None
+    for p in sorted(_glob.glob(str(path_glob))):
+        try:
+            g = generation(p)
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile,
+                json.JSONDecodeError):
+            continue
+        if best is None or g >= best[1]:
+            best = (Path(p), g)
+    return best

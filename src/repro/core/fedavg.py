@@ -761,6 +761,10 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         }
         meta = {"version": 1, "flcfg": repr(flcfg), "cluster": int(cid),
                 "rounds_done": int(t_done),
+                # publish generation for serving-registry pollers
+                # (checkpoint.latest): the GLOBAL executed-round counter,
+                # monotone across clusters, unlike per-cluster rounds_done
+                "generation": int(executed),
                 "done": [int(dc) for dc in results],
                 "rng": rng.bit_generator.state,
                 "accountant": engine.accountant.state_dict(),

@@ -40,6 +40,27 @@ def init_forecaster(key, cfg: ForecasterConfig, dtype=jnp.float32) -> Dict:
     return {"layers": layers, "head": head}
 
 
+def param_template(cfg: ForecasterConfig, dtype=jnp.float32) -> Dict:
+    """Zero-valued tree with :func:`init_forecaster`'s exact structure.
+
+    The shape/treedef oracle for structure-driven loads (e.g.
+    ``checkpoint.unflatten_like`` in the serving registry) — no PRNG key
+    needed, since only the skeleton matters.
+    """
+    gates = 4 if cfg.cell == "lstm" else 3
+    layers = []
+    for l in range(cfg.n_layers):
+        inp = cfg.input_dim if l == 0 else cfg.hidden_dim
+        layers.append({
+            "wx": jnp.zeros((inp, gates * cfg.hidden_dim), dtype),
+            "wh": jnp.zeros((cfg.hidden_dim, gates * cfg.hidden_dim), dtype),
+            "b": jnp.zeros((gates * cfg.hidden_dim,), dtype),
+        })
+    head = {"w": jnp.zeros((cfg.hidden_dim, cfg.horizon), dtype),
+            "b": jnp.zeros((cfg.horizon,), dtype)}
+    return {"layers": layers, "head": head}
+
+
 # ------------------------------------------------------------------ cells
 def lstm_cell(x_t, h, c, p):
     """One LSTM step (paper §3.2.1). x_t: (B, in); h, c: (B, H)."""

@@ -1,0 +1,29 @@
+"""High-throughput forecast-serving tier (paper §5.4: the FL-trained global
+model serves thousands of UNSEEN consumers with no client-side retraining).
+
+Three pieces, composed by the drivers and ``benchmarks/bench_serving.py``:
+
+* :class:`~repro.serving.engine.ServingEngine` — request coalescing into
+  jit-compiled padded power-of-two shape buckets (zero steady-state
+  recompiles, per-request normalization/denormalization inside the engine).
+* :class:`~repro.serving.registry.ModelRegistry` — per-slot model handles
+  with atomic hot-swap, int8 serving weights, and checkpoint polling so FL
+  training runs publish new globals live.
+* :class:`~repro.serving.router.ClusterRouter` — nearest-centroid cluster
+  assignment for unseen consumers on privacy-coarsened daily summaries.
+
+See ``docs/serving.md`` for the architecture and knob guide.
+"""
+from repro.serving.engine import (EngineStats, FlushStats, ForecastRequest,
+                                  ServingEngine, bucket_for, bucket_ladder)
+from repro.serving.registry import (GLOBAL_SLOT, ModelHandle, ModelRegistry,
+                                    dequantize_params, quantize_params)
+from repro.serving.router import ClusterRouter, daily_summary_of
+
+__all__ = [
+    "ServingEngine", "ForecastRequest", "FlushStats", "EngineStats",
+    "bucket_for", "bucket_ladder",
+    "ModelRegistry", "ModelHandle", "GLOBAL_SLOT",
+    "quantize_params", "dequantize_params",
+    "ClusterRouter", "daily_summary_of",
+]

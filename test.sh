@@ -53,4 +53,10 @@ if [ "$#" -eq 0 ]; then
       --clients 200 --rounds 4 --clients-per-round 8 --days 30 --smoke \
       --mode semi_sync --stragglers lognormal --over-select 1.5 \
       --buffer-k 12 --secure-agg --churn 0,0.2 --timeout-rounds 1
+  # serving smoke: replay a small Poisson trace through the padded-bucket
+  # engine with cluster routing + a mid-replay hot-swap; asserts zero
+  # steady-state recompiles (jit-cache probe) on fp32 AND int8 weights.
+  echo "== bench_serving smoke (replayed trace, hot-swap + routing)"
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_serving.py --smoke
 fi

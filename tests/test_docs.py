@@ -68,3 +68,27 @@ def test_docs_mention_every_e2e_flag():
     undocumented = {f for f in flags if f"`{f}`" not in readme}
     assert not undocumented, (
         f"README flag table is missing {sorted(undocumented)}")
+
+
+def test_serving_doc_exists_and_readme_lists_the_tier():
+    """docs/serving.md is a deliverable (ISSUE 8) and the README layout
+    table names the serving package."""
+    assert (REPO / "docs" / "serving.md").exists()
+    readme = README.read_text()
+    assert "src/repro/serving/" in readme
+    assert "docs/serving.md" in readme
+
+
+@pytest.mark.parametrize("driver", [
+    REPO / "src" / "repro" / "launch" / "serve.py",
+    REPO / "benchmarks" / "bench_serving.py",
+], ids=lambda p: p.name)
+def test_serving_doc_mentions_every_driver_flag(driver):
+    """docs/serving.md flag tables track the serving drivers' argparse —
+    same honesty contract the README holds for the e2e driver."""
+    flags = set(re.findall(r'add_argument\("(--[\w-]+)"', driver.read_text()))
+    doc = (REPO / "docs" / "serving.md").read_text()
+    undocumented = {f for f in flags if f"`{f}`" not in doc}
+    assert not undocumented, (
+        f"docs/serving.md is missing {sorted(undocumented)} "
+        f"from {driver.name}")

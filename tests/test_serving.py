@@ -1,0 +1,387 @@
+"""Serving-tier contracts (ISSUE 8): padded-bucket batching, zero
+steady-state recompiles, hot-swap atomicity, int8 parity, checkpoint
+publish/poll generations, and unseen-consumer cluster routing.
+
+The load-bearing pins:
+
+* **Zero steady-state jit-cache growth** — after ``warmup()`` a stream of
+  ragged request counts WITH a mid-stream hot-swap must add no entries,
+  probed via ``analysis.recompile.count_recompiles`` against
+  ``ServingEngine.jit_cache_size`` (the acceptance-criteria invariant).
+* **Ragged-tail regression** for ``launch/serve.py::serve_forecaster``:
+  tails pad to a power-of-two bucket instead of retracing per count.
+* **Hot-swap atomicity**: a publish racing a flush lands at the NEXT flush
+  boundary — one batch never mixes generations.
+* **int8 parity**: the serving quantizer is bit-identical to the uplink
+  ``transforms.StochasticQuantize`` grid, and fp32-vs-int8 forecasts agree
+  within a pinned MAPE delta.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.analysis import recompile
+from repro.configs.base import FLConfig, ForecasterConfig
+from repro.core import clustering, fedavg
+from repro.core.transforms import StochasticQuantize
+from repro.data import synthetic, windows
+from repro.launch import serve
+from repro.models import forecaster
+from repro.serving import (GLOBAL_SLOT, ClusterRouter, ModelRegistry,
+                           ServingEngine, bucket_for, bucket_ladder,
+                           daily_summary_of, dequantize_params,
+                           quantize_params)
+
+CFG = ForecasterConfig(hidden_dim=8)
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return forecaster.init_forecaster(jax.random.fold_in(KEY, 1), CFG)
+
+
+def _manual_kwh(p, window, lo, hi, cfg=CFG):
+    """Reference path: normalize -> jitted forward -> denormalize."""
+    scale = max(hi - lo, 1e-9)
+    xn = (np.asarray(window, np.float32) - lo) / scale
+    out = forecaster.forecast(p, jnp.asarray(xn)[None, :, None], cfg)
+    return np.asarray(out)[0] * scale + lo
+
+
+# ------------------------------------------------------------------ buckets
+def test_bucket_for_rounds_up_to_clamped_power_of_two():
+    assert bucket_for(1, 8, 256) == 8
+    assert bucket_for(8, 8, 256) == 8
+    assert bucket_for(9, 8, 256) == 16
+    assert bucket_for(129, 8, 256) == 256
+    assert bucket_for(3, 1, 256) == 4
+    with pytest.raises(ValueError):
+        bucket_for(0, 8, 256)
+    with pytest.raises(ValueError):
+        bucket_for(257, 8, 256)
+
+
+def test_bucket_ladder_is_bounded():
+    assert bucket_ladder(8, 64) == [8, 16, 32, 64]
+    assert bucket_ladder(16, 16) == [16]
+
+
+def test_engine_rejects_non_power_of_two_buckets(params):
+    reg = ModelRegistry()
+    reg.publish(params, CFG, generation=1)
+    with pytest.raises(ValueError):
+        ServingEngine(reg, max_batch=100)
+    with pytest.raises(ValueError):
+        ServingEngine(reg, max_batch=8, min_bucket=16)
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_publish_is_strictly_monotone(params):
+    reg = ModelRegistry()
+    reg.publish(params, CFG, generation=1)
+    with pytest.raises(ValueError):
+        reg.publish(params, CFG, generation=1)       # stale: not newer
+    assert reg.publish(params, CFG, generation=0, if_newer=True) is None
+    reg.publish(params, CFG, generation=5)
+    assert reg.generation() == 5
+    assert reg.generation(slot=3) == -1              # empty slot, no fallback
+
+
+def test_registry_global_fallback(params):
+    reg = ModelRegistry()
+    with pytest.raises(KeyError):
+        reg.handle(0)                                # nothing published yet
+    reg.publish(params, CFG, generation=1)           # GLOBAL_SLOT
+    assert reg.handle(3).slot == GLOBAL_SLOT         # unserved cluster
+    reg.publish(params, CFG, slot=3, generation=1)
+    assert reg.handle(3).slot == 3
+    assert reg.slots() == [GLOBAL_SLOT, 3]
+
+
+def test_registry_int8_publish_requires_key(params):
+    reg = ModelRegistry()
+    with pytest.raises(ValueError):
+        reg.publish(params, CFG, generation=1, weights="int8")
+    with pytest.raises(ValueError):
+        reg.publish(params, CFG, generation=1, weights="fp16")
+
+
+# --------------------------------------------------------------------- int8
+def test_quantize_matches_uplink_transform_bit_for_bit(params):
+    """dequantize(quantize_params(p, k)) == StochasticQuantize(8)(p, k):
+    the serving grid IS the wire grid, not a lookalike."""
+    k = jax.random.fold_in(KEY, 4)
+    deq = dequantize_params(quantize_params(params, k))
+    ref = StochasticQuantize(bits=8)(params, k)
+    for a, b in zip(jax.tree.leaves(deq), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantize_roundtrip_error_within_one_grid_step(params):
+    k = jax.random.fold_in(KEY, 5)
+    q = quantize_params(params, k)
+    deq = dequantize_params(q)
+    for x, d in zip(jax.tree.leaves(params), jax.tree.leaves(deq)):
+        step = float(np.max(np.abs(np.asarray(x)))) / 127.0
+        assert float(np.max(np.abs(np.asarray(d) - np.asarray(x)))) \
+            <= step + 1e-7
+
+
+def test_int8_vs_fp32_serving_parity_mape_bound(params):
+    """fp32-parity pin: int8 serving weights shift forecasts < 2% MAPE
+    (measured ~0.4% — the bound leaves quantization-noise headroom)."""
+    hist = synthetic.generate_buildings("CA", list(range(8)), days=5)
+
+    def run(weights):
+        reg = ModelRegistry()
+        reg.publish(params, CFG, generation=1, weights=weights,
+                    key=(jax.random.fold_in(KEY, 3)
+                         if weights == "int8" else None))
+        eng = ServingEngine(reg, max_batch=8, min_bucket=8, auto_flush=False)
+        reqs = [eng.submit(i, h[-CFG.lookback:], history=h)
+                for i, h in enumerate(hist)]
+        eng.flush()
+        return np.stack([r.result for r in reqs])
+
+    f32, i8 = run("fp32"), run("int8")
+    mape = np.mean(np.abs(i8 - f32) / np.maximum(np.abs(f32), 1e-6))
+    assert mape < 0.02, f"int8 serving MAPE delta {mape:.4f} exceeds 2%"
+
+
+# ------------------------------------------------------------------- engine
+def test_engine_forecast_matches_manual_normalization(params):
+    """Raw watt-hours in, kWh out: the engine's in-jit normalize/denormalize
+    equals the by-hand normalize -> forecast -> denormalize path."""
+    reg = ModelRegistry()
+    reg.publish(params, CFG, generation=1)
+    eng = ServingEngine(reg, max_batch=16, min_bucket=8)
+    hist = synthetic.generate_buildings("CA", [7], days=5)[0]
+    req = eng.submit(7, hist[-CFG.lookback:], history=hist)
+    eng.flush()
+    manual = _manual_kwh(params, hist[-CFG.lookback:],
+                         float(hist.min()), float(hist.max()))
+    np.testing.assert_allclose(req.result, manual, rtol=2e-5, atol=1e-5)
+
+
+def test_engine_validates_window_length(params):
+    reg = ModelRegistry()
+    reg.publish(params, CFG, generation=1)
+    eng = ServingEngine(reg, max_batch=8, min_bucket=8)
+    with pytest.raises(ValueError, match="lookback"):
+        eng.submit(0, np.ones(CFG.lookback + 1, np.float32))
+
+
+def test_engine_auto_flush_at_max_batch(params):
+    reg = ModelRegistry()
+    reg.publish(params, CFG, generation=1)
+    eng = ServingEngine(reg, max_batch=8, min_bucket=8, auto_flush=True)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(None, rng.random(CFG.lookback, np.float32) + 1.0)
+            for _ in range(8)]
+    assert all(r.done for r in reqs)                 # 8th submit flushed
+    assert eng.pending() == 0 and eng.stats.flushes == 1
+    assert eng.stats.by_bucket == {8: 1}
+
+
+def test_consumer_cache_routing_and_window_fallback(params):
+    series = synthetic.generate_buildings("CA", list(range(6)), days=4)
+    z = windows.daily_average_vector(series, days=3)
+    cents, _, _ = clustering.kmeans(z, 2, seed=0)
+    router = ClusterRouter(cents)
+    reg = ModelRegistry()
+    for s in (GLOBAL_SLOT, 0, 1):
+        reg.publish(params, CFG, slot=s, generation=1)
+    eng = ServingEngine(reg, router, max_batch=8, min_bucket=8,
+                        auto_flush=False)
+    h = series[0]
+    r1 = eng.submit(0, h[-CFG.lookback:], history=h)
+    assert r1.slot == router.route(h)                # routed at first contact
+    r2 = eng.submit(0, h[-CFG.lookback:])            # cache hit: no history
+    assert (r2.slot, r2.lo, r2.hi) == (r1.slot, r1.lo, r1.hi)
+    r3 = eng.submit(None, h[-CFG.lookback:])         # anonymous fallback
+    assert r3.slot == GLOBAL_SLOT
+    assert r3.lo == float(h[-CFG.lookback:].min())   # window-only stats
+    eng.flush()
+    assert all(r.done for r in (r1, r2, r3))
+
+
+def test_warmup_compiles_one_program_per_bucket_and_weights(params):
+    reg = ModelRegistry()
+    reg.publish(params, CFG, generation=1)                       # fp32
+    reg.publish(params, CFG, slot=0, generation=1, weights="int8",
+                key=jax.random.fold_in(KEY, 6))
+    eng = ServingEngine(reg, max_batch=32, min_bucket=8, auto_flush=False)
+    ladder = bucket_ladder(8, 32)
+    assert eng.warmup() == 2 * len(ladder)           # fp32 + int8 kinds
+
+
+# ------------------------------------------------- steady-state recompiles
+@pytest.mark.parametrize("weights", ["fp32", "int8"])
+def test_zero_steady_state_recompiles(params, weights):
+    """THE acceptance-criteria invariant: after warmup, ragged request
+    streams + a hot-swap add zero jit-cache entries (params are traced,
+    shapes are bucketed)."""
+    reg = ModelRegistry()
+    key = jax.random.fold_in(KEY, 7) if weights == "int8" else None
+    reg.publish(params, CFG, generation=1, weights=weights, key=key)
+    eng = ServingEngine(reg, max_batch=32, min_bucket=8, auto_flush=False)
+    eng.warmup()
+    p2 = jax.tree.map(lambda a: a * 1.01, params)
+    rng = np.random.default_rng(1)
+
+    def step(i):
+        if i == 2:                                   # mid-stream hot-swap
+            reg.publish(p2, CFG, generation=1 + i, weights=weights,
+                        key=key, if_newer=True)
+        for n in (1, 5, 8, 17, 32):                  # ragged, spans ladder
+            for _ in range(n):
+                eng.submit(None, rng.random(CFG.lookback, np.float32) + 1.0)
+            eng.flush()
+
+    rep = recompile.count_recompiles(step, steps=3,
+                                     cache_size=eng.jit_cache_size)
+    assert rep.ok, rep.render()
+    assert eng.stats.swaps_seen >= 1                 # the swap really landed
+
+
+def test_serve_forecaster_ragged_tail_does_not_retrace(params):
+    """Regression (satellite 1): the batch loop pads ragged tails to a
+    power-of-two bucket, so once the ≤ log2(batch)+1 bucket shapes are
+    compiled, arbitrary request counts reuse them — pinned against the
+    jitted forward's own cache."""
+    rng = np.random.default_rng(2)
+    for b in bucket_ladder(1, 64):                   # warm every bucket once
+        serve.serve_forecaster(
+            params, CFG, rng.random((b, CFG.lookback)).astype(np.float32),
+            batch=64)
+    warm = forecaster.forecast._cache_size()
+    for n in (65, 67, 70, 93, 127, 130, 200):        # ragged tails galore
+        out = serve.serve_forecaster(
+            params, CFG, rng.random((n, CFG.lookback)).astype(np.float32),
+            batch=64)
+        assert out.shape == (n, CFG.horizon)
+    assert forecaster.forecast._cache_size() == warm, \
+        "ragged final batches retraced the jitted forward"
+
+
+# -------------------------------------------------------- hot-swap atomicity
+class _SwapOnHandle(ModelRegistry):
+    """Adversarial registry: fires a publish the instant a flush fetches its
+    handle — models a checkpoint poller racing the batch executor."""
+
+    def __init__(self):
+        super().__init__()
+        self.armed = None
+
+    def handle(self, slot=GLOBAL_SLOT):
+        h = super().handle(slot)
+        if self.armed is not None:
+            fire, self.armed = self.armed, None
+            fire()
+        return h
+
+
+def test_hot_swap_never_mixes_params_within_a_batch(params):
+    reg = _SwapOnHandle()
+    reg.publish(params, CFG, generation=1)
+    eng = ServingEngine(reg, max_batch=16, min_bucket=8, auto_flush=False)
+    p2 = jax.tree.map(lambda a: a + 1.0, params)     # grossly different
+    rng = np.random.default_rng(3)
+    wins = (rng.random((10, CFG.lookback)) * 3 + 1).astype(np.float32)
+    reqs = [eng.submit(None, w) for w in wins]
+    reg.armed = lambda: reg.publish(p2, CFG, generation=2)
+    stats = eng.flush()
+    # the publish landed immediately after the flush's snapshot: the WHOLE
+    # batch must still serve generation 1 — never a gen-1/gen-2 mix
+    assert [fs.generation for fs in stats] == [1]
+    for r, w in zip(reqs, wins):
+        manual = _manual_kwh(params, w, float(w.min()), float(w.max()))
+        np.testing.assert_allclose(r.result, manual, rtol=2e-5, atol=1e-5)
+    # ... and the NEXT flush boundary observes the new generation
+    eng.submit(None, wins[0])
+    assert [fs.generation for fs in eng.flush()] == [2]
+    assert eng.stats.swaps_seen == 1
+
+
+# -------------------------------------------------- checkpoint publish/poll
+def test_checkpoint_generation_metadata_only(tmp_path):
+    tree = {"w": np.arange(3, dtype=np.float32)}
+    checkpoint.save(tmp_path / "a", tree, metadata={"generation": 4})
+    checkpoint.save(tmp_path / "b", tree, metadata={"rounds_done": 2})
+    checkpoint.save(tmp_path / "c", tree)
+    assert checkpoint.generation(tmp_path / "a") == 4
+    assert checkpoint.generation(tmp_path / "b") == 2    # legacy fallback
+    assert checkpoint.generation(tmp_path / "c") == -1   # no metadata
+
+
+def test_checkpoint_latest_orders_by_generation(tmp_path):
+    tree = {"w": np.zeros(2, np.float32)}
+    for name, gen in [("r1", 1), ("r3", 3), ("r2", 2)]:
+        checkpoint.save(tmp_path / name, tree, metadata={"generation": gen})
+    (tmp_path / "half.npz").write_bytes(b"not a zip archive")  # torn write
+    path, gen = checkpoint.latest(str(tmp_path / "*.npz"))
+    assert (path.name, gen) == ("r3.npz", 3)
+    assert checkpoint.latest(str(tmp_path / "missing*.npz")) is None
+    # ties break toward the lexicographically LAST path (poller agreement)
+    checkpoint.save(tmp_path / "r4", tree, metadata={"generation": 3})
+    assert checkpoint.latest(str(tmp_path / "*.npz"))[0].name == "r4.npz"
+
+
+def test_fl_run_publishes_and_registry_polls_and_serves(tmp_path):
+    """End-to-end FL-rounds-as-publisher: train with ``checkpoint_path``,
+    poll the glob into a registry (generation = global executed rounds),
+    then serve an unseen window off the polled model."""
+    flcfg = FLConfig(n_clients=4, clients_per_round=4, rounds=2,
+                     n_clusters=0, seed=0, lr=0.05)
+    series = synthetic.generate_buildings("CA", list(range(4)), days=4)
+    fedavg.run_federated_training(series, CFG, flcfg,
+                                  checkpoint_path=tmp_path / "fl",
+                                  checkpoint_every=1)
+    reg = ModelRegistry()
+    updated = reg.poll_checkpoint(str(tmp_path / "*.npz"), CFG)
+    assert [h.slot for h in updated] == [GLOBAL_SLOT]
+    assert reg.generation(GLOBAL_SLOT) == flcfg.rounds
+    # watermark: an unchanged glob is a cheap no-op on the next poll
+    assert reg.poll_checkpoint(str(tmp_path / "*.npz"), CFG) == []
+    eng = ServingEngine(reg, max_batch=8, min_bucket=8)
+    req = eng.submit(0, series[0][-CFG.lookback:], history=series[0])
+    eng.flush()
+    assert req.done and req.result.shape == (CFG.horizon,)
+    assert np.isfinite(req.result).all()
+
+
+# ------------------------------------------------------------------- router
+def test_router_matches_training_side_assignment():
+    series = synthetic.generate_buildings("CA", list(range(6)), days=4)
+    days = 3
+    z = windows.daily_average_vector(series, days=days)
+    cents, _, _ = clustering.kmeans(z, 2, seed=0)
+    router = ClusterRouter(cents)
+    assert router.enabled and router.days == days
+    for s in series:
+        expect = int(clustering.assign(daily_summary_of(s, days)[None, :],
+                                       cents)[0])
+        assert router.route(s) == expect
+    np.testing.assert_array_equal(router.route_summaries(z),
+                                  clustering.assign(z, cents))
+
+
+def test_router_disabled_maps_everything_global():
+    r = ClusterRouter(None)
+    assert not r.enabled
+    assert r.route(np.ones(10)) == GLOBAL_SLOT
+    np.testing.assert_array_equal(r.route_summaries(np.zeros((3, 5))),
+                                  [GLOBAL_SLOT] * 3)
+
+
+def test_daily_summary_pads_ragged_histories():
+    # 1.5 days of history: day 1 contributes, the rest pads with its mean
+    s = np.concatenate([np.full(96, 2.0), np.full(48, 4.0)])
+    np.testing.assert_allclose(daily_summary_of(s, 4), [2.0, 2.0, 2.0, 2.0])
+    # sub-day history degenerates to a flat summary
+    np.testing.assert_allclose(daily_summary_of(np.full(10, 3.0), 3), 3.0)
+    np.testing.assert_allclose(daily_summary_of(np.empty(0), 2), 0.0)
