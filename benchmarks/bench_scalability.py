@@ -239,6 +239,26 @@ def _report_secure_overhead(state, n, rounds, clients_per_round, days, seed,
           f"{clear_rps / max(masked_rps, 1e-9):.2f}x slower rounds, "
           f"{m_mask['mape'] - m_clear['mape']:+.3f} pp MAPE (masks cancel "
           "in the aggregate — any residual is float rounding)")
+    # audited wire cost of masking (flcheck level-3 cost auditor): the
+    # masked upload re-widens to fp32 — make the byte regression visible
+    # next to the throughput cost it rides along with
+    from repro.analysis import costs
+    masked_flcfg = FLConfig(n_clients=n, clients_per_round=clients_per_round,
+                            rounds=rounds, lr=0.05, loss="ew_mse",
+                            n_clusters=0, server_opt="fedavg_weighted",
+                            seed=seed, **pipe)
+    a_clear = costs.audit_upload(fcfg, flcfg.transform)
+    a_mask = costs.audit_upload(fcfg, masked_flcfg.transform,
+                                masked_flcfg.secure)
+    print("variant,wire,audited_bytes_per_client,modeled_bytes_per_client")
+    print(f"clear,{a_clear['wire']},{a_clear['audited_bytes']},"
+          f"{a_clear['modeled_bytes']}")
+    print(f"masked,{a_mask['wire']},{a_mask['audited_bytes']},"
+          f"{a_mask['modeled_bytes']}")
+    print(f"# masked-fp32 wire gap: "
+          f"{a_mask['audited_bytes'] - a_clear['audited_bytes']:+d} "
+          "B/client/round vs the clear wire (tracked divergence; ring "
+          "masking on the quantizer's grid is the ROADMAP buy-back)")
 
 
 def _report_pipeline_delta(state, n, rounds, clients_per_round, days, seed,

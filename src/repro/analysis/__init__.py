@@ -10,10 +10,16 @@ Two levels:
   quantize -> mask).  Plus a jit recompile guard and an implicit host<->device
   transfer check for the round hot path (``analysis/recompile.py``).
 * **Level 2 — AST lint** (``analysis/prng_lint.py``, ``determinism.py``,
-  ``dtypes.py``): PRNG hygiene (raw literal keys, key reuse, arithmetic seed
-  derivation), nondeterminism in ``core/``/``data/``, and dtype hazards in
-  ``core/``/``kernels/``.  Rule catalog + inline suppression syntax live in
-  ``analysis/rules.py``.
+  ``dtypes.py``, ``concurrency.py``): PRNG hygiene (raw literal keys, key
+  reuse, arithmetic seed derivation), nondeterminism in ``core/``/``data/``,
+  dtype hazards in ``core/``/``kernels/``, and serving-tier concurrency
+  hazards (unlocked shared mutation, TOCTOU handle fetches, unbounded cache
+  growth, Python branches on traced values) in ``serving/``.  Rule catalog +
+  inline suppression syntax live in ``analysis/rules.py``.
+* **Level 3 — wire-format & cost audit** (``analysis/costs.py``): read the
+  declared wire encoding off every boundary crossing of the traced round,
+  derive exact per-client upload bytes + per-stage FLOP/HBM totals, and gate
+  them against the committed ``analysis/baselines/round_costs.json``.
 
 CLI: ``python -m repro.analysis src/`` or ``tools/flcheck src/``.
 

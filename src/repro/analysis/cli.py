@@ -5,12 +5,16 @@ Usage (from the repo root)::
     tools/flcheck src/                      # level-2 AST lint (fast, no jax)
     tools/flcheck --taint                   # level-1 jaxpr taint proofs
     tools/flcheck --hot-path                # recompile + transfer guards
+    tools/flcheck --cost --baseline \
+        src/repro/analysis/baselines/round_costs.json   # level-3 cost gate
+    tools/flcheck --cost --update-baseline  # rewrite the committed baseline
     tools/flcheck --all src/                # everything CI runs
     tools/flcheck --list-rules
 
 Exit status: 0 when every selected pass is clean (suppressed findings with a
 rationale are clean; ``disable`` comments WITHOUT a rationale are fatal),
-1 on any finding/violation, 2 on usage errors.
+1 on any finding/violation, 2 on usage errors — including a missing or
+Python-free lint target ('nothing to lint' is an error, not a pass).
 """
 from __future__ import annotations
 
@@ -19,11 +23,11 @@ import os
 import sys
 from typing import Iterable, List, Tuple
 
-from repro.analysis import determinism, dtypes, prng_lint
+from repro.analysis import concurrency, determinism, dtypes, prng_lint
 from repro.analysis.rules import RULES, Finding, Suppressions, relpath
 
 _CHECKERS = (prng_lint.check_source, determinism.check_source,
-             dtypes.check_source)
+             dtypes.check_source, concurrency.check_source)
 
 
 def _iter_py(paths: Iterable[str]) -> Iterable[str]:
@@ -38,6 +42,21 @@ def _iter_py(paths: Iterable[str]) -> Iterable[str]:
                 for f in sorted(filenames):
                     if f.endswith(".py"):
                         yield os.path.join(dirpath, f)
+
+
+def check_paths(paths: List[str]) -> List[str]:
+    """Fatal path errors: a missing target, or a directory with no Python
+    under it.  'nothing to lint' must never silently pass as 'clean' —
+    a typo'd path would otherwise green-light CI."""
+    errors = []
+    for p in paths:
+        if not os.path.exists(p):
+            errors.append(f"flcheck: path does not exist: {p}")
+        elif os.path.isfile(p) and not p.endswith(".py"):
+            errors.append(f"flcheck: not a Python file: {p}")
+        elif os.path.isdir(p) and not any(_iter_py([p])):
+            errors.append(f"flcheck: no Python files under: {p}")
+    return errors
 
 
 def find_repo_root(start: str) -> str:
@@ -136,6 +155,65 @@ def run_taint(quick: bool = False) -> int:
     return rc
 
 
+def resolve_baseline(arg: str, root: str) -> str:
+    """Baseline path resolution: as given if it exists or is absolute,
+    else relative to the repo root (CI passes the repo-relative path from
+    any working directory)."""
+    if os.path.isabs(arg) or os.path.exists(arg):
+        return arg
+    return os.path.join(root, arg)
+
+
+def run_cost(root: str, baseline: str = None, update: bool = False) -> int:
+    """Level-3 cost audit + baseline gate (see ``analysis/costs.py``).
+
+    Always runs the fatal wire proof (quantize-on uploads must reach every
+    boundary as int8-grid + fp32-scale on every traced path).  With
+    ``--baseline``, diffs the fresh report against the committed JSON and
+    fails on any wire-byte / boundary-dtype / stage-FLOP drift; with
+    ``--update-baseline``, rewrites the JSON instead (do this ONLY in the
+    same change that intentionally moved the cost — see
+    docs/static_analysis.md).
+    """
+    import json
+
+    from repro.analysis import costs
+
+    report = costs.cost_report()
+    print(costs.render_summary(report))
+    rc = 0
+    for msg in costs.check_report(report):
+        rc = 1
+        print(f"flcheck cost FATAL: {msg}")
+    path = resolve_baseline(baseline or costs.DEFAULT_BASELINE, root)
+    if update:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(costs.canonical_json(report))
+        print(f"flcheck cost: baseline written to {path}")
+        return rc
+    if baseline is not None:
+        if not os.path.exists(path):
+            print(f"flcheck cost FATAL: baseline not found: {path} "
+                  "(generate it with --cost --update-baseline)")
+            return 1
+        with open(path, "r", encoding="utf-8") as f:
+            base = json.load(f)
+        errors, warnings = costs.diff_reports(base, report)
+        for w in warnings:
+            print(f"flcheck cost note: {w}")
+        for e in errors:
+            rc = 1
+            print(f"flcheck cost DRIFT: {e}")
+        if not errors:
+            print(f"flcheck cost: report matches baseline {path}")
+        else:
+            print("flcheck cost: wire/FLOP drift against the committed "
+                  "baseline — if the change is intentional, rerun with "
+                  "--cost --update-baseline and commit the JSON")
+    return rc
+
+
 def run_hot_path() -> int:
     from repro.analysis import recompile
 
@@ -164,8 +242,16 @@ def main(argv=None) -> int:
                     help="vmap-only taint proof (fast smoke)")
     ap.add_argument("--hot-path", action="store_true",
                     help="run the recompile + transfer guards (slow)")
+    ap.add_argument("--cost", action="store_true",
+                    help="run the level-3 wire-format & cost audit")
+    ap.add_argument("--baseline", metavar="JSON",
+                    help="with --cost: diff the report against this "
+                         "committed baseline and fail on drift")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="with --cost: rewrite the baseline JSON instead "
+                         "of diffing")
     ap.add_argument("--all", action="store_true",
-                    help="lint + taint + hot-path")
+                    help="lint + taint + hot-path + cost audit")
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the AST lint (with --taint/--hot-path)")
     ap.add_argument("--show-suppressed", action="store_true",
@@ -179,11 +265,24 @@ def main(argv=None) -> int:
             print(f"{rule.code} {rule.name} [{scope}]\n    {rule.summary}")
         return 0
 
+    if (args.baseline or args.update_baseline) and not args.cost:
+        print("flcheck: --baseline/--update-baseline require --cost",
+              file=sys.stderr)
+        return 2
+
     root = find_repo_root(args.paths[0] if args.paths else os.getcwd())
     paths = args.paths or [os.path.join(root, "src")]
     do_taint = args.taint or args.quick_taint or args.all
     do_hot = args.hot_path or args.all
-    do_lint = not args.no_lint or not (do_taint or do_hot)
+    do_cost = args.cost or args.all
+    do_lint = not args.no_lint or not (do_taint or do_hot or do_cost)
+
+    if do_lint:
+        path_errors = check_paths(paths)
+        if path_errors:
+            for e in path_errors:
+                print(e, file=sys.stderr)
+            return 2
 
     rc = 0
     if do_lint:
@@ -191,6 +290,9 @@ def main(argv=None) -> int:
     if do_taint:
         rc |= run_taint(quick=args.quick_taint and not (args.taint
                                                         or args.all))
+    if do_cost:
+        rc |= run_cost(root, baseline=args.baseline,
+                       update=args.update_baseline)
     if do_hot:
         rc |= run_hot_path()
     return rc

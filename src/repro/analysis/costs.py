@@ -1,0 +1,383 @@
+"""Level-3 flcheck: static wire-format & cost auditor for the round.
+
+The paper's scalability pitch is a COST claim — int8-quantized uplinks,
+edge->region->cloud fan-in, Pi-class compute budgets — but the repo's
+simulated costs live in a hand-maintained formula
+(``core/latency.py::payload_bytes``).  This module makes the cost model
+*proved* instead of asserted: it re-runs the level-1 taint interpreter over
+the REAL traced round bodies (``taint.verify_pipeline``, all four execution
+paths) and reads, off every boundary crossing, the payload dtype and the
+declared wire encoding (``declassify(..., wire=...)`` markers planted by
+``core/transforms.py`` / ``core/secure_agg.py``), then derives exact
+per-client upload bytes:
+
+* ``int<k>+scale`` — the quantizer's integer grid: ``ceil(size*k/8)`` bytes
+  per leaf plus one fp32 scale (4 bytes) per leaf;
+* anything else — raw fp32, 4 bytes per coordinate.  The pairwise masker
+  re-declares ``float32`` because float masks do not fit any integer grid —
+  the audited masked-upload regression is reported as a TRACKED divergence
+  (non-fatal; ``latency.payload_bytes`` documents the same fallback and
+  ``RoundEngine`` charges fp32 when masking is on).
+
+Alongside the wire audit, :func:`stage_costs` walks the marker-free
+production jaxprs with the scan-aware cost model
+(``launch/costmodel.jaxpr_cost``) and positions the per-stage FLOP/HBM-byte
+totals against the ``launch/roofline.py`` constants (single-chip seconds;
+the same PEAK_FLOPS / HBM_BW the dry-run roofline uses).
+
+**What is and is not proved.**  The audit proves the DECLARED wire format
+reaching each boundary on the traced dataflow — the quantizer's simulated
+dequantize floats *stand for* the int grid the real uplink ships, and the
+audit proves no later stage silently re-widened them (the masker visibly
+does).  It does not measure a real network, does not model headers or
+framing, and the FLOP counts inherit ``jaxpr_cost``'s fusion-blind byte
+methodology.  Everything the audit emits is deterministic for a fixed jax
+version, which is what makes the baseline diff a gate:
+``tools/flcheck --cost --baseline src/repro/analysis/baselines/round_costs.json``
+fails when wire bytes, boundary dtypes, or stage FLOPs drift without a
+deliberate ``--update-baseline``.
+
+Import-light contract (see ``analysis/__init__``): ``repro.core`` /
+``repro.launch`` are imported lazily inside functions only.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+PyTree = Any
+
+VERSION = 1
+# repo-relative committed baseline (the CI gate target)
+DEFAULT_BASELINE = "src/repro/analysis/baselines/round_costs.json"
+
+# the audited execution paths; flat8/hier2x4 pin the 8-virtual-device CI
+# geometry so the traced jaxpr (and its cost) is identical everywhere
+PATHS = ("vmap", "semi_sync", "flat8", "hier2x4")
+
+
+def _audit_matrix():
+    """(name, tcfg, scfg) triples the canonical report covers: raw-fp32,
+    quantize-on (the int8 proof target), and quantize+secure (the tracked
+    masked-fp32 divergence)."""
+    from repro.configs.base import SecureAggConfig, TransformConfig
+    return (
+        ("fp32", TransformConfig(clip_norm=1.0), None),
+        ("quantize8", TransformConfig(clip_norm=1.0, quantize_bits=8), None),
+        ("quantize8_secure",
+         TransformConfig(clip_norm=1.0, quantize_bits=8),
+         SecureAggConfig(enabled=True)),
+    )
+
+
+# ------------------------------------------------------------ wire formats
+def wire_bits(wire: Optional[str]) -> int:
+    """Payload bits per coordinate for a declared wire encoding."""
+    if wire and wire.startswith("int") and wire.endswith("+scale"):
+        return int(wire[3:-len("+scale")])
+    return 32
+
+
+def leaf_wire_bytes(size: int, wire: Optional[str]) -> int:
+    """Exact uplink bytes of ONE leaf of ``size`` coordinates: the integer
+    grid packed to ``ceil(size*k/8)`` plus its fp32 scale, or raw fp32."""
+    if wire and wire.startswith("int") and wire.endswith("+scale"):
+        k = wire_bits(wire)
+        return math.ceil(size * k / 8) + 4          # +4: per-leaf fp32 scale
+    return size * 4
+
+
+def model_leaf_sizes(fcfg) -> List[int]:
+    """Coordinate counts of the model's param leaves (shape-only trace)."""
+    import jax
+    import numpy as np
+
+    from repro.models.forecaster import init_forecaster
+
+    tmpl = jax.eval_shape(lambda: init_forecaster(
+        jax.random.PRNGKey(0), fcfg))  # flcheck: disable=FLC001 (shape-only eval_shape stand-in; bits never materialize)
+    return [int(np.prod(l.shape)) if l.shape else 1
+            for l in jax.tree.leaves(tmpl)]
+
+
+def payload_bytes_for_wire(fcfg, wire: Optional[str]) -> int:
+    """Audited per-client upload bytes: the declared wire encoding applied
+    leaf-by-leaf to the model's parameter tree."""
+    return sum(leaf_wire_bytes(s, wire) for s in model_leaf_sizes(fcfg))
+
+
+# ------------------------------------------------------------- path audits
+def _verify(topology: str, tcfg, scfg, fcfg):
+    from repro.analysis import taint
+    topo = {"flat8": "flat", "hier2x4": "hier"}.get(topology, topology)
+    return taint.verify_pipeline(topo, tcfg, scfg, fcfg=fcfg)
+
+
+def audit_round(topology: str, tcfg, scfg=None, fcfg=None) -> Dict[str, Any]:
+    """Audit one (execution path, config): taint-proof the boundary, read
+    the declared wire encoding off the tainted crossings, and derive the
+    exact per-client upload bytes plus the tracked divergences against the
+    ``latency.payload_bytes`` formula."""
+    from repro.configs.base import ForecasterConfig
+    from repro.core import latency
+
+    fcfg = fcfg or ForecasterConfig(hidden_dim=8)
+    report = _verify(topology, tcfg, scfg, fcfg)
+    bnd = [c for c in report.crossings
+           if c.primitive == "flcheck_boundary"]
+    tainted = [c for c in bnd if c.tainted]
+    # all upload leaves must agree on the encoding; a mix joins to widest
+    wires = {c.wire for c in tainted}
+    wire = None
+    for w in wires:
+        wire = w if wire is None and w is not None else wire
+    if None in wires or not wires:
+        wire = "float32"                 # undeclared leaves ship raw fp32
+    labels = sorted(set.intersection(*[set(c.labels) for c in tainted])) \
+        if tainted else []
+
+    sizes = model_leaf_sizes(fcfg)
+    n_params = sum(sizes)
+    secure_on = scfg is not None and scfg.enabled
+    audited = sum(leaf_wire_bytes(s, wire) for s in sizes)
+    # what RoundEngine charges the latency model (formula, not audit)
+    modeled = latency.payload_bytes(
+        n_params, 0 if secure_on else tcfg.quantize_bits)
+
+    divergences: List[Dict[str, Any]] = []
+    if tcfg.quantize_bits and not secure_on:
+        # formula ignores the per-leaf fp32 scale the real wire carries
+        delta = audited - latency.payload_bytes(n_params, tcfg.quantize_bits)
+        if delta:
+            divergences.append(dict(
+                kind="scale_overhead", bytes=int(delta), fatal=False,
+                note=f"{len(sizes)} per-leaf fp32 scales the "
+                     "payload_bytes formula documents as ignored"))
+    if secure_on and tcfg.quantize_bits:
+        ideal = sum(leaf_wire_bytes(s, f"int{tcfg.quantize_bits}+scale")
+                    for s in sizes)
+        divergences.append(dict(
+            kind="masked_fp32_regression", bytes=int(audited - ideal),
+            fatal=False,
+            note="float pairwise masks destroy the int"
+                 f"{tcfg.quantize_bits} grid: masked uploads ship fp32 "
+                 f"({audited} B) instead of the quantized "
+                 f"{ideal} B — the ROADMAP secure-agg-hardening buy-back; "
+                 "RoundEngine already charges fp32 (formula agrees)"))
+
+    return {
+        "proved": bool(report.proved),
+        "wire": wire,
+        "labels": labels,
+        "upload_bytes_per_client": int(audited),
+        "modeled_bytes_per_client": int(modeled),
+        "divergences": divergences,
+        "crossings": [
+            {"primitive": c.primitive, "shape": list(c.shape),
+             "dtype": c.dtype, "tainted": bool(c.tainted),
+             "wire": (c.wire or "float32") if c.tainted else c.dtype}
+            for c in bnd],
+    }
+
+
+def audit_upload(fcfg, tcfg, scfg=None, topology: str = "vmap"
+                 ) -> Dict[str, Any]:
+    """Bench-facing wrapper: audited vs modeled upload bytes for one
+    config on one path (default: the vmap trace — wire format is
+    path-invariant, proved by the full matrix in the cost report)."""
+    a = audit_round(topology, tcfg, scfg, fcfg)
+    return {"wire": a["wire"],
+            "audited_bytes": a["upload_bytes_per_client"],
+            "modeled_bytes": a["modeled_bytes_per_client"],
+            "divergences": a["divergences"],
+            "proved": a["proved"]}
+
+
+# ------------------------------------------------------------- stage costs
+def _roofline_position(flops: int, hbm_bytes: int) -> Dict[str, Any]:
+    from repro.launch import mesh as mesh_mod
+    compute_s = flops / mesh_mod.PEAK_FLOPS
+    hbm_s = hbm_bytes / mesh_mod.HBM_BW
+    return {"compute_s": float(f"{compute_s:.3e}"),
+            "hbm_s": float(f"{hbm_s:.3e}"),
+            "bound": "memory" if hbm_s > compute_s else "compute"}
+
+
+def stage_costs(fcfg, tcfg, scfg=None, m: int = 4) -> Dict[str, Any]:
+    """Per-stage FLOP / HBM-byte totals of the production (marker-free)
+    round jaxprs, positioned against the ``launch/roofline.py`` constants.
+
+    ``client_dispatch`` is the select->local-update->transform prefix (the
+    semi-sync dispatch body); ``round_total`` the full vmap round; the
+    aggregate+server remainder is reported as their difference (derived —
+    both traces share shapes, so the subtraction is exact up to common
+    subexpressions XLA would fuse anyway)."""
+    from repro.analysis import taint
+    from repro.launch import costmodel
+
+    jx_round = taint.trace_pipeline_round(fcfg, tcfg, scfg, m=m,
+                                          analysis=False)
+    jx_disp = taint.trace_client_deltas(fcfg, tcfg, scfg, m=m,
+                                        analysis=False)
+    rc = costmodel.jaxpr_cost(jx_round)
+    dc = costmodel.jaxpr_cost(jx_disp)
+    agg_f = max(int(rc["flops"]) - int(dc["flops"]), 0)
+    agg_b = max(int(rc["bytes"]) - int(dc["bytes"]), 0)
+    out = {
+        "client_dispatch": {"flops": int(dc["flops"]),
+                            "hbm_bytes": int(dc["bytes"])},
+        "round_total": {"flops": int(rc["flops"]),
+                        "hbm_bytes": int(rc["bytes"])},
+        "aggregate_server": {"flops": agg_f, "hbm_bytes": agg_b,
+                             "derived": True},
+    }
+    for stage in out.values():
+        stage["roofline"] = _roofline_position(stage["flops"],
+                                               stage["hbm_bytes"])
+    return out
+
+
+# ---------------------------------------------------------- report + gate
+def cost_report(fcfg=None) -> Dict[str, Any]:
+    """The canonical cost report the baseline gate diffs.
+
+    Deterministic for a fixed jax version: fixed tiny model, fixed client
+    count, fixed config matrix.  ``flat8``/``hier2x4`` need the 8-virtual-
+    device CI geometry and are listed under ``skipped`` elsewhere (the diff
+    treats a skip as a warning, not a drift)."""
+    import jax
+
+    from repro.configs.base import ForecasterConfig
+
+    fcfg = fcfg or ForecasterConfig(hidden_dim=8)
+    n_dev = len(jax.devices())
+    sizes = model_leaf_sizes(fcfg)
+    audits: Dict[str, Any] = {}
+    skipped: Dict[str, str] = {}
+    for path in PATHS:
+        if path in ("flat8", "hier2x4") and n_dev != 8:
+            skipped[path] = (f"needs 8 virtual devices, have {n_dev} "
+                             "(run under test.sh / CI XLA_FLAGS)")
+            continue
+        for cname, tcfg, scfg in _audit_matrix():
+            audits[f"{path}/{cname}"] = audit_round(path, tcfg, scfg, fcfg)
+    q8 = _audit_matrix()[1]
+    return {
+        "version": VERSION,
+        "model": {"cell": fcfg.cell, "hidden_dim": fcfg.hidden_dim,
+                  "lookback": fcfg.lookback, "horizon": fcfg.horizon,
+                  "n_params": int(sum(sizes)), "n_leaves": len(sizes)},
+        "audits": audits,
+        "skipped": skipped,
+        "stages": stage_costs(fcfg, q8[1], q8[2]),
+        "stage_trace": "quantize8 config, vmap, m=4 clients",
+    }
+
+
+def check_report(report: Dict[str, Any]) -> List[str]:
+    """The int8 wire PROOF: fatal messages when any audited path breaks the
+    declared-format contract (independent of any baseline)."""
+    fatal: List[str] = []
+    for key, a in sorted(report["audits"].items()):
+        path, cname = key.split("/", 1)
+        if not a["proved"]:
+            fatal.append(f"{key}: taint proof is not non-vacuous — the "
+                         "boundary markers are disconnected")
+        if cname == "quantize8" and a["wire"] != "int8+scale":
+            fatal.append(
+                f"{key}: quantize-on upload is {a['wire']!r}, expected "
+                "'int8+scale' — a stage after the quantizer re-widened "
+                "the wire (or the quantizer lost its declaration)")
+        if cname == "fp32" and wire_bits(a["wire"]) != 32:
+            fatal.append(f"{key}: raw config declares {a['wire']!r} — an "
+                         "int grid without a quantize stage cannot be real")
+    return fatal
+
+
+def canonical_json(report: Dict[str, Any]) -> str:
+    return json.dumps(report, sort_keys=True, indent=2) + "\n"
+
+
+def diff_reports(baseline: Dict[str, Any], current: Dict[str, Any]
+                 ) -> Tuple[List[str], List[str]]:
+    """(errors, warnings) between the committed baseline and a fresh
+    report.  Errors gate CI: wire bytes, boundary dtypes/shapes, declared
+    encodings, and stage FLOP/byte totals must match the baseline exactly;
+    a path the current environment cannot trace (device count) is a
+    warning, never silent."""
+    errors: List[str] = []
+    warnings: List[str] = []
+    if baseline.get("version") != current.get("version"):
+        errors.append(f"report version {current.get('version')} != baseline "
+                      f"{baseline.get('version')}")
+        return errors, warnings
+    if baseline.get("model") != current.get("model"):
+        errors.append(f"audited model changed: {current.get('model')} != "
+                      f"baseline {baseline.get('model')}")
+    b_aud, c_aud = baseline.get("audits", {}), current.get("audits", {})
+    for key in sorted(set(b_aud) | set(c_aud)):
+        if key not in c_aud:
+            path = key.split("/", 1)[0]
+            if path in current.get("skipped", {}):
+                warnings.append(f"{key}: not audited here "
+                                f"({current['skipped'][path]}) — baseline "
+                                "entry kept, compared in CI")
+            else:
+                errors.append(f"{key}: in baseline but not audited — "
+                              "removed path needs --update-baseline")
+            continue
+        if key not in b_aud:
+            errors.append(f"{key}: audited but absent from baseline — new "
+                          "path needs --update-baseline")
+            continue
+        b, c = b_aud[key], c_aud[key]
+        for field in ("wire", "upload_bytes_per_client",
+                      "modeled_bytes_per_client", "labels", "proved"):
+            if b.get(field) != c.get(field):
+                errors.append(f"{key}: {field} {c.get(field)!r} != baseline "
+                              f"{b.get(field)!r}")
+        if b.get("crossings") != c.get("crossings"):
+            errors.append(f"{key}: boundary crossings changed "
+                          f"({len(c.get('crossings', []))} vs baseline "
+                          f"{len(b.get('crossings', []))} records, or "
+                          "shape/dtype/wire drift)")
+        bdiv = {d["kind"]: d["bytes"] for d in b.get("divergences", [])}
+        cdiv = {d["kind"]: d["bytes"] for d in c.get("divergences", [])}
+        if bdiv != cdiv:
+            errors.append(f"{key}: tracked divergences {cdiv} != baseline "
+                          f"{bdiv}")
+    b_st, c_st = baseline.get("stages", {}), current.get("stages", {})
+    for name in sorted(set(b_st) | set(c_st)):
+        b, c = b_st.get(name, {}), c_st.get(name, {})
+        for field in ("flops", "hbm_bytes"):
+            if b.get(field) != c.get(field):
+                errors.append(f"stage {name}: {field} {c.get(field)} != "
+                              f"baseline {b.get(field)}")
+    return errors, warnings
+
+
+def render_summary(report: Dict[str, Any]) -> str:
+    """Human-readable audit summary (what ``flcheck --cost`` prints)."""
+    lines = []
+    m = report["model"]
+    lines.append(f"cost audit: {m['cell']} h={m['hidden_dim']} "
+                 f"({m['n_params']} params, {m['n_leaves']} leaves)")
+    for key, a in sorted(report["audits"].items()):
+        lines.append(
+            f"  {key}: wire={a['wire']} "
+            f"upload={a['upload_bytes_per_client']}B "
+            f"modeled={a['modeled_bytes_per_client']}B "
+            f"proved={a['proved']}")
+        for d in a["divergences"]:
+            lines.append(f"    tracked divergence [{d['kind']}] "
+                         f"{d['bytes']:+d}B: {d['note']}")
+    for path, why in sorted(report.get("skipped", {}).items()):
+        lines.append(f"  {path}: SKIPPED ({why})")
+    for name, st in sorted(report.get("stages", {}).items()):
+        r = st["roofline"]
+        lines.append(f"  stage {name}: {st['flops']:.3e} flops, "
+                     f"{st['hbm_bytes']:.3e} HBM B -> {r['bound']}-bound "
+                     f"on one v5e chip (compute {r['compute_s']:.2e}s, "
+                     f"hbm {r['hbm_s']:.2e}s)")
+    return "\n".join(lines)

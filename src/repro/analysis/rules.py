@@ -61,6 +61,26 @@ RULES: Dict[str, Rule] = {r.code: r for r in (
          "kernel code",
          scope=("src/repro/core/", "src/repro/kernels/",
                 "src/repro/serving/")),
+    Rule("FLC006", "unlocked-shared-mutation",
+         "mutation of shared container state outside the class's own lock "
+         "— a class that guards SOME writes with a threading lock has "
+         "declared its state shared; the unlocked write is a race",
+         scope=("src/repro/serving/",)),
+    Rule("FLC007", "non-atomic-handle-fetch",
+         "two registry .handle() fetches (or a .generation() probe then a "
+         ".handle() fetch) in one function — a hot swap between them "
+         "invalidates the first look; take one handle snapshot (TOCTOU)",
+         scope=("src/repro/serving/",)),
+    Rule("FLC008", "unbounded-cache-growth",
+         "per-key mapping state that only ever grows (keyed inserts, no "
+         "eviction or size check anywhere in the class) — leaks under real "
+         "serving traffic; bound it or suppress with the rationale",
+         scope=("src/repro/serving/",)),
+    Rule("FLC009", "python-branch-on-traced",
+         "Python if/while on a jnp.* result — raises TracerBoolConversion"
+         "Error under jit and forces a per-request device sync in eager "
+         "serving code; use jnp.where/lax.cond or an explicit host read",
+         scope=("src/repro/serving/",)),
 )}
 
 

@@ -102,11 +102,21 @@ def tag_private(tree: PyTree) -> PyTree:
     return jax.tree.map(lambda x: source_p.bind(x), tree)
 
 
-def declassify(tree: PyTree, label: str) -> PyTree:
-    """Record that ``tree`` passed the transform stage ``label``."""
+def declassify(tree: PyTree, label: str,
+               wire: Optional[str] = None) -> PyTree:
+    """Record that ``tree`` passed the transform stage ``label``.
+
+    ``wire`` optionally declares the WIRE ENCODING the stage leaves the
+    upload in (``"int8+scale"`` for the quantizer's int grid + per-leaf
+    fp32 scale, ``"float32"`` for a stage that re-widens, e.g. the float
+    pairwise masks).  The level-3 cost auditor (``analysis/costs.py``)
+    reads the declaration off the boundary crossings; stages that do not
+    change the encoding pass ``wire=None`` and the value keeps whatever
+    encoding it already carried (``None`` = raw fp32)."""
     if not _ANALYSIS_MODE:
         return tree
-    return jax.tree.map(lambda x: declassify_p.bind(x, label=label), tree)
+    return jax.tree.map(
+        lambda x: declassify_p.bind(x, label=label, wire=wire), tree)
 
 
 def boundary(tree: PyTree) -> PyTree:
@@ -128,11 +138,44 @@ COLLECTIVES = frozenset({
 
 @dataclasses.dataclass(frozen=True)
 class Taint:
-    """Labels of the sanitizer stages this value has passed through."""
+    """Labels of the sanitizer stages this value has passed through, plus
+    the declared wire encoding (``None`` = undeclared, i.e. raw fp32)."""
     labels: FrozenSet[str]
+    wire: Optional[str] = None
 
 
 TaintVal = Optional[Taint]  # None = clean (no private ancestry)
+
+
+def _wire_rank(wire: Optional[str]) -> int:
+    """Width order for joining wire declarations: an ``int<k>+scale`` grid
+    is narrower than an undeclared/float32 payload; mixing always widens to
+    the widest ancestor (conservative: a sum of an int8 grid with anything
+    wider no longer fits the grid)."""
+    if wire and wire.startswith("int") and wire.endswith("+scale"):
+        try:
+            return int(wire[3:-len("+scale")])
+        except ValueError:  # pragma: no cover - malformed declaration
+            return 1 << 10
+    return 1 << 10                       # None / "float32" / unknown: widest
+
+
+def _join_wire(a: Optional[str], b: Optional[str]) -> Optional[str]:
+    return a if _wire_rank(a) >= _wire_rank(b) else b
+
+
+@dataclasses.dataclass(frozen=True)
+class Crossing:
+    """One boundary/collective equation observed by the interpreter — the
+    raw material of the level-3 cost audit (``analysis/costs.py``):
+    primitive name, operand shape/dtype, and (for tainted operands) the
+    joined sanitizer labels + declared wire encoding."""
+    primitive: str
+    shape: tuple
+    dtype: str
+    tainted: bool
+    labels: Optional[FrozenSet[str]] = None
+    wire: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +196,9 @@ class TaintReport:
     violations: List[TaintViolation]
     checked: int       # boundary/collective eqns that saw a tainted operand
     sources: int       # tag_private markers found in the jaxpr
+    # every boundary/collective crossing observed (tainted or not), in eqn
+    # order — consumed by the level-3 cost auditor (analysis/costs.py)
+    crossings: List[Crossing] = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -176,16 +222,25 @@ class TaintReport:
 
 def _join(taints: Sequence[TaintVal]) -> TaintVal:
     """Combine operand taints: tainted if ANY is; labels = intersection over
-    the tainted ones (mixing weakens to the least-sanitized ancestor)."""
+    the tainted ones (mixing weakens to the least-sanitized ancestor); the
+    wire encoding widens to the widest tainted ancestor."""
     labels: Optional[FrozenSet[str]] = None
+    wire: Optional[str] = None
+    first = True
     for t in taints:
         if t is not None:
-            labels = t.labels if labels is None else (labels & t.labels)
-    return None if labels is None else Taint(labels)
+            if labels is None:
+                labels = t.labels
+            else:
+                labels = labels & t.labels
+            wire = t.wire if first else _join_wire(wire, t.wire)
+            first = False
+    return None if labels is None else Taint(labels, wire)
 
 
 def _taint_eq(a: TaintVal, b: TaintVal) -> bool:
-    return (a is None) == (b is None) and (a is None or a.labels == b.labels)
+    return (a is None) == (b is None) and \
+        (a is None or (a.labels == b.labels and a.wire == b.wire))
 
 
 def _merge(old: TaintVal, new: TaintVal) -> TaintVal:
@@ -218,13 +273,23 @@ class _Interp:
         self.violations: List[TaintViolation] = []
         self.checked = 0
         self.sources = 0
+        self.crossings: List[Crossing] = []
 
-    def _check(self, prim: str, taints: Sequence[TaintVal]) -> None:
-        tainted = [t for t in taints if t is not None]
-        if not tainted:
+    def _check(self, eqn, taints: Sequence[TaintVal]) -> None:
+        prim = eqn.primitive.name
+        joined = _join(taints)
+        for v in eqn.invars:
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            self.crossings.append(Crossing(
+                prim, tuple(aval.shape), str(aval.dtype),
+                joined is not None,
+                None if joined is None else joined.labels,
+                None if joined is None else joined.wire))
+        if joined is None:
             return
         self.checked += 1
-        joined = _join(tainted)
         missing = self.required - joined.labels
         if missing:
             self.violations.append(
@@ -257,12 +322,16 @@ class _Interp:
         if name == "flcheck_declassify":
             t = in_t[0]
             label = eqn.params["label"]
-            return [None if t is None else Taint(t.labels | {label})]
+            wire = eqn.params.get("wire")
+            if t is None:
+                return [None]
+            return [Taint(t.labels | {label},
+                          t.wire if wire is None else wire)]
         if name == "flcheck_boundary":
-            self._check(name, in_t)
+            self._check(eqn, in_t)
             return [_join(in_t)]
         if name in COLLECTIVES:
-            self._check(name, in_t)
+            self._check(eqn, in_t)
             return [_join(in_t)] * n_out
         if name == "scan":
             return self._scan(eqn, in_t)
@@ -339,7 +408,7 @@ def analyze_closed(closed_jaxpr, required: FrozenSet[str],
         in_taints = [None] * len(jx.invars)
     interp.run(jx, list(in_taints), const_t)
     return TaintReport(frozenset(required), interp.violations,
-                       interp.checked, interp.sources)
+                       interp.checked, interp.sources, interp.crossings)
 
 
 # -------------------------------------------------------- pipeline proofs
@@ -378,14 +447,24 @@ def _round_shapes(fcfg, m: int, n_win: int = 4, steps: int = 2,
     return params, x, y, bidx, w, keys, slots, rk, lr, mu
 
 
+def _maybe_analysis(analysis: bool):
+    import contextlib
+    return analysis_mode() if analysis else contextlib.nullcontext()
+
+
 def trace_pipeline_round(fcfg, tcfg, scfg=None, acfg=None, mesh=None,
-                         m: Optional[int] = None, cell_impl: str = "jnp"):
+                         m: Optional[int] = None, cell_impl: str = "jnp",
+                         analysis: bool = True):
     """Trace the REAL round body (vmap or mesh path) to a ClosedJaxpr with
     the taint markers active.
 
     Deliberately bypasses both jit caches (``pipeline_round.__wrapped__``,
     ``make_pipeline_round.__wrapped__``): a cached trace from a production
     (marker-free) run must never satisfy — or pollute — the analysis.
+
+    ``analysis=False`` traces the PRODUCTION jaxpr (markers are no-ops, so
+    they contribute zero equations) — what the level-3 FLOP/byte cost model
+    walks, so marker bookkeeping can never pollute the cost numbers.
     """
     from repro.core import fedavg, losses
     from repro.configs.base import AggregationConfig
@@ -403,7 +482,7 @@ def trace_pipeline_round(fcfg, tcfg, scfg=None, acfg=None, mesh=None,
             return body(params, x, y, bidx, w, keys, lr, mu, fcfg, loss,
                         tcfg, cell_impl, scfg, rk if secure_on else None)
 
-        with analysis_mode():
+        with _maybe_analysis(analysis):
             return jax.make_jaxpr(entry)(params, x, y, bidx, w, keys, rk,
                                          lr, mu)
 
@@ -413,7 +492,7 @@ def trace_pipeline_round(fcfg, tcfg, scfg=None, acfg=None, mesh=None,
     m = m or n_dev
     acfg = acfg or AggregationConfig()
     params, x, y, bidx, w, keys, slots, rk, lr, mu = _round_shapes(fcfg, m)
-    with analysis_mode():
+    with _maybe_analysis(analysis):
         # fresh (uncached) jitted round: lru_cache bypassed on purpose
         fn = fedavg.make_pipeline_round.__wrapped__(
             mesh, fcfg, loss, tcfg, acfg, cell_impl, scfg)
@@ -424,7 +503,7 @@ def trace_pipeline_round(fcfg, tcfg, scfg=None, acfg=None, mesh=None,
 
 
 def trace_client_deltas(fcfg, tcfg, scfg=None, m: int = 4,
-                        cell_impl: str = "jnp"):
+                        cell_impl: str = "jnp", analysis: bool = True):
     """Trace the semi-sync dispatch stage (``async_engine.client_deltas``)
     — the boundary there is the function's RETURN (the buffered uploads)."""
     from repro.core import async_engine, losses
@@ -440,7 +519,7 @@ def trace_client_deltas(fcfg, tcfg, scfg=None, m: int = 4,
                     cell_impl, scfg, rk if secure_on else None,
                     w if secure_on else None, None)
 
-    with analysis_mode():
+    with _maybe_analysis(analysis):
         return jax.make_jaxpr(entry)(params, x, y, bidx, w, keys, rk, lr,
                                      mu)
 

@@ -372,7 +372,8 @@ class RoundEngine:
 
     def __init__(self, fcfg: ForecasterConfig, flcfg: FLConfig, *,
                  loss: Optional[Callable] = None, mesh=None,
-                 cell_impl: str = "jnp"):
+                 cell_impl: str = "jnp",
+                 audited_payload: Optional[float] = None):
         # stage names/knobs were validated eagerly by the FLConfig facade
         self.fcfg, self.flcfg = fcfg, flcfg
         ccfg = flcfg.client_opt
@@ -405,11 +406,14 @@ class RoundEngine:
         from repro.core import async_engine, latency as latency_mod
         self.async_cfg = flcfg.async_config
         # float pairwise masks destroy the int8 wire format (ring masking is
-        # future work — ROADMAP), so masked uploads are charged fp32 bytes
+        # future work — ROADMAP), so masked uploads are charged fp32 bytes.
+        # audited_payload (the flcheck level-3 auditor's statically derived
+        # byte count, analysis/costs.py) overrides the formula when given.
         wire_bits = 0 if self.secure is not None else flcfg.quantize_bits
         self.latency = latency_mod.LatencyModel(
             self.async_cfg.latency, flcfg.seed,
-            latency_mod.payload_bytes(fcfg.num_params(), wire_bits),
+            latency_mod.payload_bytes(fcfg.num_params(), wire_bits,
+                                      audited_bytes=audited_payload),
             churn=flcfg.churn)
         self.async_state = async_engine.SemiSyncState()
         self._client_fn = None

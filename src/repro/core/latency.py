@@ -50,7 +50,7 @@ edge->region->cloud aggregation.
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -66,13 +66,23 @@ _AVAIL_STREAM = 0xA7A1                 # per-round membership availability
 _REUPLOAD_STREAM = 0x2E71              # retry / re-key re-upload latency
 
 
-def payload_bytes(n_params: int, quantize_bits: int = 0) -> float:
-    """Uplink payload of one client update: fp32, or ``quantize_bits``-bit
-    ints when the quantize transform is on (per-leaf scale overhead is a few
-    floats on a ~140k-param model — ignored).  Callers must pass
-    ``quantize_bits=0`` when secure-agg masking is on: the float pairwise
-    masks destroy the int8 wire format, so the masked upload is fp32
-    regardless of the quantize stage (``RoundEngine`` does this)."""
+def payload_bytes(n_params: int, quantize_bits: int = 0,
+                  audited_bytes: Optional[float] = None) -> float:
+    """Uplink payload of one client update.
+
+    ``audited_bytes`` — a statically audited byte count from the level-3
+    flcheck cost auditor (``analysis/costs.py``: exact per-leaf wire
+    encoding read off the traced round's boundary crossings) — is the
+    source of truth when given; the closed-form below is the FALLBACK
+    model: fp32, or ``quantize_bits``-bit ints when the quantize transform
+    is on (per-leaf scale overhead is a few floats on a ~140k-param model —
+    ignored; the auditor counts it and reports the delta as a tracked
+    divergence).  Callers must pass ``quantize_bits=0`` when secure-agg
+    masking is on: the float pairwise masks destroy the int8 wire format,
+    so the masked upload is fp32 regardless of the quantize stage
+    (``RoundEngine`` does this; the auditor reports the same regression)."""
+    if audited_bytes is not None:
+        return float(audited_bytes)
     if quantize_bits:
         return math.ceil(n_params * quantize_bits / 8)
     return n_params * 4.0
@@ -171,7 +181,8 @@ class LatencyModel:
 
 
 def link_budget(n_params: int, m_clients: int, n_regions: int,
-                quantize_bits: int = 0) -> Dict[str, float]:
+                quantize_bits: int = 0,
+                audited_up: Optional[float] = None) -> Dict[str, float]:
     """Per-level wire cost of one round's uploads, in bytes.
 
     ``flat``: all m client payloads land on the cloud link.  Hierarchical:
@@ -179,10 +190,15 @@ def link_budget(n_params: int, m_clients: int, n_regions: int,
     fan-in) and forwards ONE fp32 partial upstream, so cloud ingress drops
     from m payloads to R — client quantization compresses the fan-in links,
     the region->cloud partials are already-aggregated floats.
+
+    ``audited_up`` overrides the per-client UPLOAD payload with a
+    statically audited byte count (see :func:`payload_bytes`); the
+    region->cloud partials stay modeled fp32 — they are post-aggregation
+    floats regardless of the client wire format.
     """
     if n_regions < 1:
         raise ValueError(f"n_regions must be >= 1, got {n_regions}")
-    up = payload_bytes(n_params, quantize_bits)
+    up = payload_bytes(n_params, quantize_bits, audited_bytes=audited_up)
     region_fanin = math.ceil(m_clients / n_regions) * up
     flat_ingress = m_clients * up
     cloud_ingress = (flat_ingress if n_regions == 1

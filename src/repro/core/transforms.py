@@ -130,8 +130,12 @@ class StochasticQuantize:
             u = jax.random.uniform(k, x.shape)
             q = jnp.clip(jnp.floor(x / safe + u), -levels, levels)
             out.append((q * safe).astype(x.dtype))
-        # taint marker (production no-op): this stage's flcheck label
-        return taint.declassify(jax.tree.unflatten(treedef, out), "quantize")
+        # taint marker (production no-op): this stage's flcheck label.  The
+        # wire declaration is what the level-3 cost auditor reads off the
+        # boundary: the simulated-dequantize floats above STAND FOR an
+        # int<bits> grid + one fp32 scale per leaf on the real uplink.
+        return taint.declassify(jax.tree.unflatten(treedef, out), "quantize",
+                                wire=f"int{self.bits}+scale")
 
 
 @dataclasses.dataclass(frozen=True)

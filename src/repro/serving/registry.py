@@ -155,6 +155,7 @@ class ModelRegistry:
                 raise ValueError(
                     f"stale publish for slot {slot!r}: generation "
                     f"{handle.generation} <= live {cur.generation}")
+            # flcheck: disable=FLC008 (slot universe = cluster ids from the FL config, fixed per deployment; hot-swap REPLACES handles, never adds keys past the cluster count)
             self._slots[slot] = handle
         return handle
 
@@ -201,8 +202,11 @@ class ModelRegistry:
         if found is None:
             return []
         path, gen = found
-        if gen <= self._poll_gen.get(str(path_glob), -1):
-            return []
+        # watermark read under the lock: two concurrent pollers must not
+        # both see a stale watermark and double-load the same arrays
+        with self._lock:
+            if gen <= self._poll_gen.get(str(path_glob), -1):
+                return []
         flat, meta = checkpoint.load_arrays(path)
         meta = meta or {}
         template = forecaster.param_template(cfg)
@@ -225,5 +229,12 @@ class ModelRegistry:
                              weights=weights, key=k, if_newer=True)
             if h is not None:
                 updated.append(h)
-        self._poll_gen[str(path_glob)] = gen
+        # watermark write back under the lock (NOT held across publish():
+        # publish takes the same non-reentrant lock).  Worst case two racing
+        # pollers both pass the read above and both publish — if_newer makes
+        # the second a no-op, and max() keeps the watermark monotone.
+        with self._lock:
+            prev = self._poll_gen.get(str(path_glob), -1)
+            # flcheck: disable=FLC008 (one watermark per polled glob pattern; the glob set is static config, not per-request traffic)
+            self._poll_gen[str(path_glob)] = max(gen, prev)
         return updated

@@ -21,6 +21,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== flcheck smoke (lint + quick taint proof)"
 tools/flcheck --quick-taint src/
 
+# level-3 cost-audit smoke: the statically derived wire bytes / stage FLOPs
+# must match the committed baseline (the 8-virtual-device geometry above
+# covers the flat8/hier2x4 paths) — docs/static_analysis.md
+echo "== flcheck cost-audit smoke (wire bytes + stage FLOPs vs baseline)"
+tools/flcheck --no-lint --cost --baseline src/repro/analysis/baselines/round_costs.json
+
 python -m pytest -q "$@"
 
 # Default run also smokes the streaming client-window path (1 round over a

@@ -1,0 +1,20 @@
+"""Fixture: Python branch on a traced value — triggers FLC009 only.
+
+The FLC009 rule is scoped to ``src/repro/serving/``; tests feed this file
+to the checker under a pretend path in that scope.  Both constructs raise
+``TracerBoolConversionError`` under jit, and in eager serving code force a
+blocking device->host sync on every request.
+"""
+import jax.numpy as jnp
+
+
+def guard_nan(pred):
+    if jnp.any(jnp.isnan(pred)):           # FLC009: if on a traced bool
+        return jnp.zeros_like(pred)
+    return pred
+
+
+def drain(pred, budget):
+    while jnp.sum(pred) > budget:          # FLC009: while on a traced bool
+        pred = pred * 0.5
+    return pred

@@ -1,0 +1,241 @@
+"""Level-3 flcheck cost-auditor tests (analysis/costs.py).
+
+The acceptance pins of the static wire audit:
+
+* the quantize-on config PROVES int8-grid + fp32-scale uploads on every
+  traced execution path (vmap, flat 8-device, hier 2x4, semi-sync);
+* the secure-agg masked-fp32 regression is reported as a TRACKED divergence
+  (non-fatal, byte-exact) against ``latency.payload_bytes``;
+* the committed baseline gate FAILS on an injected wire-byte change;
+* the audited byte counts actually reach the latency model
+  (``payload_bytes(audited_bytes=...)`` / ``link_budget(audited_up=...)``).
+"""
+import copy
+import json
+import os
+
+import jax
+import pytest
+
+from repro.analysis import costs
+from repro.analysis.cli import find_repo_root, main as cli_main
+from repro.configs.base import (ForecasterConfig, SecureAggConfig,
+                                TransformConfig)
+from repro.core import latency
+
+FCFG = ForecasterConfig(hidden_dim=8)
+T_Q8 = TransformConfig(clip_norm=1.0, quantize_bits=8)
+T_CLIP = TransformConfig(clip_norm=1.0)
+SECURE = SecureAggConfig(enabled=True)
+
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 virtual devices (run via ./test.sh)")
+
+
+@pytest.fixture(scope="module")
+def report():
+    return costs.cost_report(FCFG)
+
+
+# ------------------------------------------------------------ wire algebra
+def test_leaf_wire_bytes():
+    # int8 grid: 1 byte/coordinate + one fp32 scale per leaf
+    assert costs.leaf_wire_bytes(32, "int8+scale") == 36
+    # sub-byte grids pack: 4-bit -> ceil(33*4/8) + 4
+    assert costs.leaf_wire_bytes(33, "int4+scale") == 17 + 4
+    assert costs.leaf_wire_bytes(32, "float32") == 128
+    assert costs.leaf_wire_bytes(32, None) == 128
+
+
+def test_model_leaf_sizes_match_param_count():
+    sizes = costs.model_leaf_sizes(FCFG)
+    assert sum(sizes) == FCFG.num_params()
+    assert len(sizes) == 5
+
+
+# --------------------------------------------------- per-path wire proofs
+@pytest.mark.parametrize("path", ["vmap", "semi_sync"])
+def test_quantize_wire_proved_small_paths(path):
+    a = costs.audit_round(path, T_Q8, None, FCFG)
+    assert a["proved"]
+    assert a["wire"] == "int8+scale"
+    tainted = [c for c in a["crossings"] if c["tainted"]]
+    assert tainted and all(c["wire"] == "int8+scale" for c in tainted)
+
+
+@needs_8_devices
+@pytest.mark.parametrize("path", ["flat8", "hier2x4"])
+def test_quantize_wire_proved_mesh_paths(path):
+    a = costs.audit_round(path, T_Q8, None, FCFG)
+    assert a["proved"]
+    assert a["wire"] == "int8+scale"
+
+
+def test_quantize_audited_bytes_and_scale_divergence():
+    a = costs.audit_round("vmap", T_Q8, None, FCFG)
+    n, leaves = FCFG.num_params(), 5
+    assert a["upload_bytes_per_client"] == n + 4 * leaves
+    assert a["modeled_bytes_per_client"] == n           # formula: ceil(n*8/8)
+    (d,) = a["divergences"]
+    assert d["kind"] == "scale_overhead"
+    assert d["bytes"] == 4 * leaves
+    assert d["fatal"] is False
+
+
+def test_masked_fp32_regression_is_tracked_nonfatal():
+    a = costs.audit_round("vmap", T_Q8, SECURE, FCFG)
+    assert a["proved"]
+    assert a["wire"] == "float32"              # mask re-widens the upload
+    n = FCFG.num_params()
+    assert a["upload_bytes_per_client"] == 4 * n
+    assert a["modeled_bytes_per_client"] == 4 * n       # engine charges fp32
+    kinds = {d["kind"]: d for d in a["divergences"]}
+    reg = kinds["masked_fp32_regression"]
+    assert reg["fatal"] is False
+    assert reg["bytes"] == 4 * n - (n + 4 * 5)
+    # the regression never fails the proof-level check
+    assert costs.check_report({"audits": {"vmap/quantize8_secure": a}}) == []
+
+
+def test_fp32_config_audited_matches_model():
+    a = costs.audit_round("vmap", T_CLIP, None, FCFG)
+    assert a["wire"] == "float32"
+    assert a["upload_bytes_per_client"] == a["modeled_bytes_per_client"]
+    assert a["divergences"] == []
+
+
+def test_check_report_catches_rewidened_quantize():
+    a = costs.audit_round("vmap", T_Q8, None, FCFG)
+    broken = dict(a, wire="float32")
+    fatal = costs.check_report({"audits": {"vmap/quantize8": broken}})
+    assert fatal and "re-widened" in fatal[0]
+
+
+# ------------------------------------------------------------ stage costs
+def test_stage_costs_shape(report):
+    stages = report["stages"]
+    assert set(stages) == {"client_dispatch", "round_total",
+                           "aggregate_server"}
+    for st in stages.values():
+        assert st["flops"] >= 0 and st["hbm_bytes"] >= 0
+        assert st["roofline"]["bound"] in ("compute", "memory")
+    # the vmap round strictly contains the dispatch prefix
+    assert stages["round_total"]["flops"] >= \
+        stages["client_dispatch"]["flops"]
+
+
+# ---------------------------------------------------------- baseline gate
+def test_self_diff_is_empty(report):
+    errors, warnings = costs.diff_reports(report, report)
+    assert errors == [] and warnings == []
+
+
+def test_injected_wire_byte_change_fails_diff(report):
+    """THE gate pin: a wire-byte drift without a baseline update must fail."""
+    drifted = copy.deepcopy(report)
+    key = next(k for k in drifted["audits"] if k.endswith("/quantize8"))
+    drifted["audits"][key]["upload_bytes_per_client"] += 1
+    errors, _ = costs.diff_reports(report, drifted)
+    assert any("upload_bytes_per_client" in e and key in e for e in errors)
+
+
+def test_injected_dtype_change_fails_diff(report):
+    drifted = copy.deepcopy(report)
+    key = next(iter(drifted["audits"]))
+    drifted["audits"][key]["crossings"][0]["dtype"] = "float64"
+    errors, _ = costs.diff_reports(report, drifted)
+    assert any("crossings" in e for e in errors)
+
+
+def test_injected_stage_flop_change_fails_diff(report):
+    drifted = copy.deepcopy(report)
+    drifted["stages"]["round_total"]["flops"] += 100
+    errors, _ = costs.diff_reports(report, drifted)
+    assert any("stage round_total" in e and "flops" in e for e in errors)
+
+
+def test_skipped_path_is_warning_not_error(report):
+    """A baseline entry the current device geometry cannot trace (flat8 /
+    hier2x4 off-CI) must downgrade to a warning, never a silent pass or a
+    spurious failure."""
+    partial = copy.deepcopy(report)
+    full = copy.deepcopy(report)
+    for key in [k for k in partial["audits"] if k.startswith("flat8/")]:
+        del partial["audits"][key]
+    partial["skipped"]["flat8"] = "needs 8 virtual devices, have 1"
+    errors, warnings = costs.diff_reports(full, partial)
+    assert errors == []
+    assert any("flat8/" in w for w in warnings)
+
+
+def test_committed_baseline_matches_fresh_report(report):
+    """The committed JSON is in sync with the code — the CI gate, as a
+    test.  Regenerate with  tools/flcheck --cost --update-baseline  when a
+    change intentionally moves wire bytes or stage FLOPs."""
+    root = find_repo_root(os.path.dirname(__file__))
+    path = os.path.join(root, costs.DEFAULT_BASELINE)
+    assert os.path.exists(path), (
+        f"committed baseline missing: {path} "
+        "(generate with tools/flcheck --cost --update-baseline)")
+    with open(path, "r", encoding="utf-8") as f:
+        baseline = json.load(f)
+    errors, _ = costs.diff_reports(baseline, report)
+    assert errors == [], "\n".join(errors)
+
+
+def test_canonical_json_is_stable(report):
+    s = costs.canonical_json(report)
+    assert s == costs.canonical_json(json.loads(s))
+    assert s.endswith("\n")
+
+
+def test_cli_cost_baseline_roundtrip(tmp_path, capsys):
+    """--update-baseline writes, --baseline passes against it, and a
+    corrupted baseline fails with exit 1."""
+    bl = tmp_path / "round_costs.json"
+    assert cli_main(["--no-lint", "--cost", "--update-baseline",
+                     "--baseline", str(bl)]) == 0
+    assert bl.exists()
+    assert cli_main(["--no-lint", "--cost", "--baseline", str(bl)]) == 0
+    data = json.loads(bl.read_text())
+    key = next(k for k in data["audits"] if k.endswith("/quantize8"))
+    data["audits"][key]["upload_bytes_per_client"] += 8
+    bl.write_text(json.dumps(data))
+    capsys.readouterr()
+    assert cli_main(["--no-lint", "--cost", "--baseline", str(bl)]) == 1
+    assert "DRIFT" in capsys.readouterr().out
+
+
+def test_cli_baseline_without_cost_is_usage_error(capsys):
+    assert cli_main(["--baseline", "x.json"]) == 2
+    assert "--cost" in capsys.readouterr().err
+
+
+# ------------------------------------------- latency-model audited rewiring
+def test_payload_bytes_audited_override():
+    assert latency.payload_bytes(1000, 8) == 1000
+    assert latency.payload_bytes(1000, 8, audited_bytes=1020) == 1020.0
+    assert latency.payload_bytes(1000, 0, audited_bytes=None) == 4000.0
+
+
+def test_link_budget_audited_up():
+    b_model = latency.link_budget(1000, 30, 3, 8)
+    b_audit = latency.link_budget(1000, 30, 3, 8, audited_up=1020)
+    assert b_audit["region_fanin_bytes"] == 10 * 1020
+    assert b_audit["flat_cloud_ingress_bytes"] == 30 * 1020
+    # region->cloud partials stay modeled fp32 in both
+    assert b_audit["cloud_ingress_bytes"] == b_model["cloud_ingress_bytes"]
+
+
+def test_round_engine_accepts_audited_payload():
+    from repro.configs.base import FLConfig
+    from repro.core import fedavg
+    a = costs.audit_round("vmap", T_Q8, None, FCFG)
+    flcfg = FLConfig(n_clients=4, clients_per_round=2, rounds=1, lr=0.1,
+                     n_clusters=0, dp_clip=1.0, quantize_bits=8)
+    eng = fedavg.RoundEngine(FCFG, flcfg,
+                             audited_payload=a["upload_bytes_per_client"])
+    expect = a["upload_bytes_per_client"] / \
+        flcfg.async_config.latency.uplink_bytes_per_s
+    assert eng.latency.uplink_s == pytest.approx(expect)

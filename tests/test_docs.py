@@ -92,3 +92,32 @@ def test_serving_doc_mentions_every_driver_flag(driver):
     assert not undocumented, (
         f"docs/serving.md is missing {sorted(undocumented)} "
         f"from {driver.name}")
+
+
+def test_static_analysis_doc_mentions_every_flcheck_flag():
+    """docs/static_analysis.md tracks the flcheck CLI argparse: adding a
+    flag to analysis/cli.py without documenting it fails here."""
+    cli = (REPO / "src" / "repro" / "analysis" / "cli.py").read_text()
+    flags = set(re.findall(r'add_argument\("(--[\w-]+)"', cli))
+    doc = (REPO / "docs" / "static_analysis.md").read_text()
+    undocumented = {f for f in flags if f"{f}" not in doc}
+    assert not undocumented, (
+        f"docs/static_analysis.md is missing {sorted(undocumented)}")
+
+
+def test_static_analysis_doc_catalogs_every_rule():
+    """Every FLC rule registered in analysis/rules.py has a row in the
+    docs/static_analysis.md catalog, and the README names the current
+    catalog range (ISSUE 9: FLC006-FLC009 + cost audit)."""
+    rules = (REPO / "src" / "repro" / "analysis" / "rules.py").read_text()
+    codes = set(re.findall(r'Rule\("(FLC\d+)"', rules))
+    assert codes, "rule registry went empty?"
+    doc = (REPO / "docs" / "static_analysis.md").read_text()
+    missing = {c for c in codes if f"| {c} |" not in doc}
+    assert not missing, (
+        f"docs/static_analysis.md rule catalog is missing {sorted(missing)}")
+    readme = README.read_text()
+    assert "FLC009" in readme, (
+        "README should name the full FLC catalog range (FLC001-FLC009)")
+    assert "--cost" in readme or "cost audit" in readme, (
+        "README should mention the level-3 cost audit gate")

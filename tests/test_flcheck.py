@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 from repro.analysis import recompile, taint
 from repro.analysis.cli import find_repo_root, lint_file, main as cli_main
 from repro.analysis.rules import RULES, Suppressions
+from repro.analysis.concurrency import check_source as conc_check
 from repro.analysis.determinism import check_source as det_check
 from repro.analysis.dtypes import check_source as dt_check
 from repro.analysis.prng_lint import check_source as prng_check
@@ -26,10 +27,15 @@ from repro.core import transforms as transforms_mod
 from repro.sharding import shard_map
 
 FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "flcheck")
-# pretend scope path: FLC004/FLC005 only fire under core/ (see rules.py)
+# pretend scope paths: FLC004/FLC005 only fire under core/, FLC006-FLC009
+# only under serving/ (see rules.py)
 CORE_REL = "src/repro/core/fixture.py"
+SERVING_REL = "src/repro/serving/fixture.py"
+# which pretend path exercises each rule's scope
+FIXTURE_REL = {"FLC006": SERVING_REL, "FLC007": SERVING_REL,
+               "FLC008": SERVING_REL, "FLC009": SERVING_REL}
 
-ALL_CHECKS = (prng_check, det_check, dt_check)
+ALL_CHECKS = (prng_check, det_check, dt_check, conc_check)
 
 
 def _run_all(source: str, rel: str = CORE_REL):
@@ -44,9 +50,11 @@ def _fixture(name: str) -> str:
 
 # ------------------------------------------------------------- level-2 lint
 @pytest.mark.parametrize("code", ["FLC001", "FLC002", "FLC003", "FLC004",
-                                  "FLC005"])
+                                  "FLC005", "FLC006", "FLC007", "FLC008",
+                                  "FLC009"])
 def test_bad_fixture_triggers_exactly_its_rule(code):
-    findings = _run_all(_fixture(f"bad_{code.lower()}.py"))
+    rel = FIXTURE_REL.get(code, CORE_REL)
+    findings = _run_all(_fixture(f"bad_{code.lower()}.py"), rel)
     assert findings, f"bad fixture for {code} produced no findings"
     assert {f.code for f in findings} == {code}, (
         f"bad fixture for {code} leaked other codes: "
@@ -59,10 +67,17 @@ def test_good_fixture_is_clean():
     assert findings == [], [(f.code, f.line, f.message) for f in findings]
 
 
+def test_good_serving_fixture_is_clean():
+    findings = _run_all(_fixture("good_serving.py"), SERVING_REL)
+    assert findings == [], [(f.code, f.line, f.message) for f in findings]
+
+
 def test_scoped_rules_do_not_fire_outside_scope():
-    # the FLC004/FLC005 fixtures are clean when the file lives in launch/
+    # the FLC004/FLC005 fixtures are clean when the file lives in launch/,
+    # and the serving-concurrency fixtures are clean OUTSIDE serving/
     rel = "src/repro/launch/fixture.py"
-    for name in ("bad_flc004.py", "bad_flc005.py"):
+    for name in ("bad_flc004.py", "bad_flc005.py", "bad_flc006.py",
+                 "bad_flc007.py", "bad_flc008.py", "bad_flc009.py"):
         findings = _run_all(_fixture(name), rel)
         assert findings == [], (name, [(f.code, f.line) for f in findings])
 
@@ -127,6 +142,35 @@ def test_cli_exit_codes(tmp_path, capsys):
     assert cli_main([str(dirty)]) == 1
     out = capsys.readouterr().out
     assert "FLC001" in out
+
+
+def test_cli_missing_path_is_fatal(tmp_path, capsys):
+    """A typo'd lint target must exit 2 with a clear message, never pass
+    as 'clean' (the satellite fix: missing != nothing-to-lint)."""
+    missing = tmp_path / "no_such_dir"
+    assert cli_main([str(missing)]) == 2
+    assert "does not exist" in capsys.readouterr().err
+
+
+def test_cli_empty_dir_is_fatal(tmp_path, capsys):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert cli_main([str(empty)]) == 2
+    assert "no Python files" in capsys.readouterr().err
+
+
+def test_cli_non_python_file_is_fatal(tmp_path, capsys):
+    txt = tmp_path / "notes.txt"
+    txt.write_text("hello\n")
+    assert cli_main([str(txt)]) == 2
+    assert "not a Python file" in capsys.readouterr().err
+
+
+def test_cli_list_rules_covers_catalog(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in RULES:
+        assert code in out
 
 
 # --------------------------------------------------------- level-1: taint
