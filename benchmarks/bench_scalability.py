@@ -210,6 +210,11 @@ def _report_secure_overhead(state, n, rounds, clients_per_round, days, seed,
     MAPE delta should be float noise while rounds/s pays the O(m^2 * params)
     mask generation."""
     clear = dict(pipe, secure_agg=False)
+    if clear.get("quantize_bits"):
+        # with quantize on, masking uses the shared-grid ring quantizer;
+        # the honest clear comparator is the same grid unmasked — the runs
+        # are then bit-identical, not merely float-close
+        clear["quantize_ring"] = True
     prov = ClientWindowProvider.from_synthetic(
         state, range(n), fcfg.lookback, fcfg.horizon, days=days)
     flcfg = FLConfig(n_clients=n, clients_per_round=clients_per_round,
@@ -238,10 +243,11 @@ def _report_secure_overhead(state, n, rounds, clients_per_round, days, seed,
     print(f"# secure-agg overhead at n={n}: "
           f"{clear_rps / max(masked_rps, 1e-9):.2f}x slower rounds, "
           f"{m_mask['mape'] - m_clear['mape']:+.3f} pp MAPE (masks cancel "
-          "in the aggregate — any residual is float rounding)")
-    # audited wire cost of masking (flcheck level-3 cost auditor): the
-    # masked upload re-widens to fp32 — make the byte regression visible
-    # next to the throughput cost it rides along with
+          "in the aggregate — bit-exact on the quantized ring wire, float "
+          "rounding on the float path)")
+    # audited wire cost of masking (flcheck level-3 cost auditor): ring
+    # masking lives in the quantizer's integer ring, so the masked upload
+    # ships the SAME wire as the clear one — assert it, don't just print it
     from repro.analysis import costs
     masked_flcfg = FLConfig(n_clients=n, clients_per_round=clients_per_round,
                             rounds=rounds, lr=0.05, loss="ew_mse",
@@ -255,10 +261,14 @@ def _report_secure_overhead(state, n, rounds, clients_per_round, days, seed,
           f"{a_clear['modeled_bytes']}")
     print(f"masked,{a_mask['wire']},{a_mask['audited_bytes']},"
           f"{a_mask['modeled_bytes']}")
-    print(f"# masked-fp32 wire gap: "
-          f"{a_mask['audited_bytes'] - a_clear['audited_bytes']:+d} "
-          "B/client/round vs the clear wire (tracked divergence; ring "
-          "masking on the quantizer's grid is the ROADMAP buy-back)")
+    assert a_mask["audited_bytes"] == a_clear["audited_bytes"], (
+        f"masked upload ({a_mask['wire']}, {a_mask['audited_bytes']} B) "
+        f"diverged from the clear wire ({a_clear['wire']}, "
+        f"{a_clear['audited_bytes']} B) — the masker re-widened the ring "
+        "(masked_fp32_regression; see tools/flcheck --cost)")
+    print(f"# masking adds 0 wire bytes: masked == clear at "
+          f"{a_mask['audited_bytes']} B/client/round "
+          f"({a_mask['wire']} — ring masks live in the quantizer's grid)")
 
 
 def _report_pipeline_delta(state, n, rounds, clients_per_round, days, seed,

@@ -62,12 +62,19 @@ def main():
                     help="Gaussian DP noise multiplier (std = z*C; 0 = off)")
     ap.add_argument("--quantize", type=int, default=0,
                     help="stochastic b-bit delta quantization (0 = off)")
+    ap.add_argument("--quantize-ring", action="store_true",
+                    help="shared-grid ring quantizer (needs --quantize): the "
+                         "clear comparator of the secure-agg wire — masked "
+                         "runs use it automatically (docs/privacy.md)")
     ap.add_argument("--secure-agg", action="store_true",
-                    help="pairwise-masked uploads whose masks cancel in "
-                         "the aggregate; size --mask-std against w*||delta||"
-                         " under weighted aggregation (docs/privacy.md)")
+                    help="pairwise-masked uploads whose masks cancel in the "
+                         "aggregate; with --quantize the masks live in the "
+                         "quantizer's integer ring (int-b wire, uniform "
+                         "masked uploads) and the accountant switches to "
+                         "central secure-agg mode (docs/privacy.md)")
     ap.add_argument("--mask-std", type=float, default=1.0,
-                    help="per-pair secure-agg mask scale")
+                    help="per-pair secure-agg mask scale (float path only: "
+                         "ring masks are uniform over the ring)")
     ap.add_argument("--privacy-delta", type=float, default=1e-5,
                     help="target delta for the (eps, delta) accountant "
                          "(reported when --dp-clip AND --dp-noise are set)")
@@ -142,6 +149,7 @@ def main():
                 prox_mu=args.prox_mu, sampling=args.sampling,
                 holdout_frac=args.holdout_frac, dp_clip=args.dp_clip,
                 dp_noise=args.dp_noise, quantize_bits=args.quantize,
+                quantize_ring=args.quantize_ring,
                 secure_agg=args.secure_agg, secure_mask_std=args.mask_std,
                 privacy_delta=args.privacy_delta,
                 aggregation="hierarchical" if args.hier else "flat",
@@ -163,8 +171,9 @@ def main():
     pipe = ""
     if (args.dp_clip or args.dp_noise or args.quantize or args.hier
             or args.secure_agg):
+        ring = bool(args.quantize) and (args.quantize_ring or args.secure_agg)
         pipe = (f", transforms clip={args.dp_clip}/noise={args.dp_noise}"
-                f"/quant={args.quantize}b"
+                f"/quant={args.quantize}b{'-ring' if ring else ''}"
                 f"{'/masked' if args.secure_agg else ''}"
                 f", agg={base['aggregation']}")
     if args.mode == "semi_sync":

@@ -13,11 +13,13 @@ per-client upload bytes:
 
 * ``int<k>+scale`` — the quantizer's integer grid: ``ceil(size*k/8)`` bytes
   per leaf plus one fp32 scale (4 bytes) per leaf;
-* anything else — raw fp32, 4 bytes per coordinate.  The pairwise masker
-  re-declares ``float32`` because float masks do not fit any integer grid —
-  the audited masked-upload regression is reported as a TRACKED divergence
-  (non-fatal; ``latency.payload_bytes`` documents the same fallback and
-  ``RoundEngine`` charges fp32 when masking is on).
+* anything else — raw fp32, 4 bytes per coordinate.  With quantize AND
+  masking on, the pairwise masker operates in the quantizer's integer ring
+  mod 2^k (``core/secure_agg.py``), so masked uploads keep the
+  ``int<k>+scale`` declaration — the audit proves end-to-end that masking
+  no longer re-widens the wire, and ``check_report`` treats any re-widened
+  masked upload as the FATAL ``masked_fp32_regression`` (the divergence the
+  audit used to merely track).
 
 Alongside the wire audit, :func:`stage_costs` walks the marker-free
 production jaxprs with the scan-aware cost model
@@ -59,8 +61,8 @@ PATHS = ("vmap", "semi_sync", "flat8", "hier2x4")
 
 def _audit_matrix():
     """(name, tcfg, scfg) triples the canonical report covers: raw-fp32,
-    quantize-on (the int8 proof target), and quantize+secure (the tracked
-    masked-fp32 divergence)."""
+    quantize-on (the int8 proof target), and quantize+secure (the ring-
+    masked path, which must hold the int8 wire UNDER masking)."""
     from repro.configs.base import SecureAggConfig, TransformConfig
     return (
         ("fp32", TransformConfig(clip_norm=1.0), None),
@@ -139,14 +141,14 @@ def audit_round(topology: str, tcfg, scfg=None, fcfg=None) -> Dict[str, Any]:
 
     sizes = model_leaf_sizes(fcfg)
     n_params = sum(sizes)
-    secure_on = scfg is not None and scfg.enabled
     audited = sum(leaf_wire_bytes(s, wire) for s in sizes)
-    # what RoundEngine charges the latency model (formula, not audit)
-    modeled = latency.payload_bytes(
-        n_params, 0 if secure_on else tcfg.quantize_bits)
+    # what RoundEngine charges the latency model (formula, not audit): the
+    # quantized wire survives masking (ring masks live in the int grid),
+    # so masked and clear uploads are charged identically
+    modeled = latency.payload_bytes(n_params, tcfg.quantize_bits)
 
     divergences: List[Dict[str, Any]] = []
-    if tcfg.quantize_bits and not secure_on:
+    if tcfg.quantize_bits:
         # formula ignores the per-leaf fp32 scale the real wire carries
         delta = audited - latency.payload_bytes(n_params, tcfg.quantize_bits)
         if delta:
@@ -154,17 +156,6 @@ def audit_round(topology: str, tcfg, scfg=None, fcfg=None) -> Dict[str, Any]:
                 kind="scale_overhead", bytes=int(delta), fatal=False,
                 note=f"{len(sizes)} per-leaf fp32 scales the "
                      "payload_bytes formula documents as ignored"))
-    if secure_on and tcfg.quantize_bits:
-        ideal = sum(leaf_wire_bytes(s, f"int{tcfg.quantize_bits}+scale")
-                    for s in sizes)
-        divergences.append(dict(
-            kind="masked_fp32_regression", bytes=int(audited - ideal),
-            fatal=False,
-            note="float pairwise masks destroy the int"
-                 f"{tcfg.quantize_bits} grid: masked uploads ship fp32 "
-                 f"({audited} B) instead of the quantized "
-                 f"{ideal} B — the ROADMAP secure-agg-hardening buy-back; "
-                 "RoundEngine already charges fp32 (formula agrees)"))
 
     return {
         "proved": bool(report.proved),
@@ -289,6 +280,12 @@ def check_report(report: Dict[str, Any]) -> List[str]:
                 f"{key}: quantize-on upload is {a['wire']!r}, expected "
                 "'int8+scale' — a stage after the quantizer re-widened "
                 "the wire (or the quantizer lost its declaration)")
+        if cname == "quantize8_secure" and a["wire"] != "int8+scale":
+            fatal.append(
+                f"{key}: masked_fp32_regression — the quantize+mask upload "
+                f"is {a['wire']!r}, expected 'int8+scale': the masker "
+                "re-widened the ring wire (masks must stay in the "
+                "quantizer's integer ring mod 2^b)")
         if cname == "fp32" and wire_bits(a["wire"]) != 32:
             fatal.append(f"{key}: raw config declares {a['wire']!r} — an "
                          "int grid without a quantize stage cannot be real")

@@ -469,8 +469,13 @@ def trace_pipeline_round(fcfg, tcfg, scfg=None, acfg=None, mesh=None,
     from repro.core import fedavg, losses
     from repro.configs.base import AggregationConfig
 
+    from repro.core import transforms as transforms_mod
+
     loss = losses.make_loss("mse")
-    secure_on = scfg is not None and scfg.enabled
+    # the extended (slots, w_full, round_key) call shape mirrors
+    # fedavg.make_pipeline_round's own needs_cohort branch — the clear ring
+    # quantizer (quantize_ring, no masker) is cohort-aware too
+    needs_ctx = transforms_mod.make_stack(tcfg, scfg).needs_cohort
     if mesh is None:
         m = m or 4
         params, x, y, bidx, w, keys, slots, rk, lr, mu = _round_shapes(
@@ -480,7 +485,7 @@ def trace_pipeline_round(fcfg, tcfg, scfg=None, acfg=None, mesh=None,
 
         def entry(params, x, y, bidx, w, keys, rk, lr, mu):
             return body(params, x, y, bidx, w, keys, lr, mu, fcfg, loss,
-                        tcfg, cell_impl, scfg, rk if secure_on else None)
+                        tcfg, cell_impl, scfg, rk if needs_ctx else None)
 
         with _maybe_analysis(analysis):
             return jax.make_jaxpr(entry)(params, x, y, bidx, w, keys, rk,
@@ -496,7 +501,7 @@ def trace_pipeline_round(fcfg, tcfg, scfg=None, acfg=None, mesh=None,
         # fresh (uncached) jitted round: lru_cache bypassed on purpose
         fn = fedavg.make_pipeline_round.__wrapped__(
             mesh, fcfg, loss, tcfg, acfg, cell_impl, scfg)
-        if secure_on:
+        if needs_ctx:
             return jax.make_jaxpr(fn)(params, x, y, bidx, w, keys, slots,
                                       w, rk, lr, mu)
         return jax.make_jaxpr(fn)(params, x, y, bidx, w, keys, lr, mu)
@@ -507,17 +512,18 @@ def trace_client_deltas(fcfg, tcfg, scfg=None, m: int = 4,
     """Trace the semi-sync dispatch stage (``async_engine.client_deltas``)
     — the boundary there is the function's RETURN (the buffered uploads)."""
     from repro.core import async_engine, losses
+    from repro.core import transforms as transforms_mod
 
     loss = losses.make_loss("mse")
-    secure_on = scfg is not None and scfg.enabled
+    needs_ctx = transforms_mod.make_stack(tcfg, scfg).needs_cohort
     params, x, y, bidx, w, keys, slots, rk, lr, mu = _round_shapes(fcfg, m)
     body = getattr(async_engine.client_deltas, "__wrapped__",
                    async_engine.client_deltas)
 
     def entry(params, x, y, bidx, w, keys, rk, lr, mu):
         return body(params, x, y, bidx, keys, lr, mu, fcfg, loss, tcfg,
-                    cell_impl, scfg, rk if secure_on else None,
-                    w if secure_on else None, None)
+                    cell_impl, scfg, rk if needs_ctx else None,
+                    w if needs_ctx else None, None)
 
     with _maybe_analysis(analysis):
         return jax.make_jaxpr(entry)(params, x, y, bidx, w, keys, rk, lr,

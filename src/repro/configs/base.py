@@ -299,6 +299,8 @@ class TransformConfig:
     clip_norm: float = 0.0             # C: per-client delta L2 bound (0 = off)
     noise_multiplier: float = 0.0      # Gaussian DP noise sigma/C (0 = off)
     quantize_bits: int = 0             # stochastic int quantize (0 = off)
+    quantize_ring: bool = False        # shared-grid ring quantizer (the
+    #                                  # secure-agg wire; forced on by masking)
 
     def __post_init__(self):
         if self.clip_norm < 0:
@@ -309,6 +311,9 @@ class TransformConfig:
         if self.quantize_bits and not 2 <= self.quantize_bits <= 8:
             raise ValueError("quantize_bits must be 0 (off) or in [2, 8], "
                              f"got {self.quantize_bits}")
+        if self.quantize_ring and not self.quantize_bits:
+            raise ValueError("quantize_ring needs quantize_bits > 0 (the "
+                             "ring IS the quantizer's integer grid)")
 
     @property
     def is_identity(self) -> bool:
@@ -322,18 +327,18 @@ class SecureAggConfig:
 
     When ``enabled``, every client adds antisymmetric pairwise masks
     (``mask_ij = -mask_ji``, derived from the dispatch cohort's shared round
-    key) to its transformed delta before it leaves the device, so the
+    key) to its WEIGHTED contribution before it leaves the device, so the
     honest-but-curious server sees per-client uploads whose masks cancel
-    exactly in the aggregator sum.  ``mask_std`` is the per-pair mask scale
-    on the client's WEIGHTED contribution ``w_i * y_i`` — masks are scaled
-    ``1/w_i`` so they cancel in the weighted sum, so the raw upload carries
-    mask noise ``N(0, (m-1) * mask_std^2 / w_i^2)`` per coordinate.  Under
-    uniform aggregation (weights 0/1) that equals ``mask_std * sqrt(m-1)``;
-    under count-weighted aggregation, size ``mask_std`` against
-    ``w * ||delta||`` or heavy clients upload weakly-masked deltas (see
-    ``core/secure_agg.py`` and docs/privacy.md).  In semi-sync mode,
-    enabling secure aggregation forces cohort-atomic folds (see
-    :class:`AsyncConfig`).
+    exactly in the aggregator sum.  The masks are full-strength on the
+    uploaded quantity itself (never scaled by ``1/w_i``), so upload secrecy
+    does not depend on the client's aggregation weight.  With the quantize
+    stage on, masking runs in the quantizer's integer ring mod ``2^b``
+    (uniform ring masks, exact wraparound cancellation, int``b``+scale
+    wire); without it, ``mask_std`` is the Gaussian mask scale on the
+    weighted float upload (see ``core/secure_agg.py`` and docs/privacy.md —
+    ``mask_std`` is ignored in ring mode, where masks are uniform over the
+    whole ring).  In semi-sync mode, enabling secure aggregation forces
+    cohort-atomic folds (see :class:`AsyncConfig`).
     """
     enabled: bool = False
     mask_std: float = 1.0
@@ -606,6 +611,9 @@ class FLConfig:
     dp_clip: float = 0.0               # per-client delta L2 clip C (0 = off)
     dp_noise: float = 0.0              # Gaussian noise multiplier (0 = off)
     quantize_bits: int = 0             # stochastic int quantize (0 = off)
+    quantize_ring: bool = False        # shared-grid ring quantizer even
+    #                                  # without masking (the clear
+    #                                  # comparator of the secure-agg wire)
     # ------------------------------------------- secure-agg / DP accounting
     secure_agg: bool = False           # pairwise-masked uploads (masks cancel
     #                                  # in the aggregator sum)
@@ -662,7 +670,8 @@ class FLConfig:
     def transform(self) -> TransformConfig:
         return TransformConfig(clip_norm=self.dp_clip,
                                noise_multiplier=self.dp_noise,
-                               quantize_bits=self.quantize_bits)
+                               quantize_bits=self.quantize_bits,
+                               quantize_ring=self.quantize_ring)
 
     @property
     def aggregation_config(self) -> AggregationConfig:

@@ -145,17 +145,18 @@ def make_sharded_client_deltas(mesh, cfg: ForecasterConfig, loss: Callable,
     the transform stack still runs INSIDE the shard_map body, so only
     privatized/compressed deltas cross shard boundaries.
 
-    With secure aggregation (``scfg.enabled``) the returned fn's signature
-    grows the cohort context, mirroring ``fedavg.make_pipeline_round``:
+    With a cohort-aware stack (secure aggregation, or the clear shared-grid
+    ring quantizer) the returned fn's signature grows the cohort context,
+    mirroring ``fedavg.make_pipeline_round``:
     ``fn(params, x, y, batch_idx, keys, slots, w_full, round_key, lr,
     prox_mu)`` — global ``slots`` shard with the clients, the cohort weight
     vector and round key replicate.
     """
     agg = aggregation_mod.make_aggregator(acfg, mesh)
     pspec = agg.pspec()
-    secure_on = scfg is not None and scfg.enabled
+    needs_ctx = transforms_mod.make_stack(tcfg, scfg).needs_cohort
 
-    if not secure_on:
+    if not needs_ctx:
         def body(params, x, y, batch_idx, keys, lr, prox_mu):
             return client_deltas(params, x, y, batch_idx, keys, lr, prox_mu,
                                  cfg, loss, tcfg, cell_impl)
@@ -196,6 +197,19 @@ def buffered_aggregate(params, deltas, weights):
     return jax.tree.map(lambda g, s: g + s / wsum, params, sums)
 
 
+@jax.jit
+def buffered_aggregate_preweighted(params, deltas, discounts, wsum):
+    """Fold PRE-WEIGHTED uploads (float masked path: each delta is already
+    ``w_i * delta_i + masks``): numerator weights are the staleness
+    discounts ALONE — scaling a masked upload by anything non-uniform
+    within its cohort would break mask cancellation, and its ``w_i`` is
+    already inside — while the denominator ``wsum`` is the usual sum of
+    discounted aggregation weights, supplied by the caller."""
+    from repro.core import fedavg as fedavg_mod
+    sums, _ = fedavg_mod._weighted_sums(deltas, discounts)
+    return jax.tree.map(lambda g, s: g + s / wsum, params, sums)
+
+
 @dataclasses.dataclass(eq=False)     # identity eq: deltas are array trees
 class PendingUpdate:
     """One dispatched-but-not-yet-aggregated client update (host-side).
@@ -220,6 +234,13 @@ class PendingUpdate:
 
 def _tree_slice(tree, i: int):
     return jax.tree.map(lambda a: np.asarray(a[i]), tree)
+
+
+def _ring_wrap_np(x: np.ndarray, bits: int) -> np.ndarray:
+    """Host-side twin of ``transforms.ring_wrap``: reduce into the centered
+    ring ``[-2^(b-1), 2^(b-1))`` (exact on float-encoded ints < 2^24)."""
+    half = float(2 ** (bits - 1))
+    return (np.mod(x + half, float(2 ** bits)) - half).astype(x.dtype)
 
 
 def _stack_padded(pending: List[PendingUpdate], weights: np.ndarray):
@@ -258,6 +279,10 @@ class SemiSyncState:
         self.cohort_sizes: dict = {}   # dispatch round -> # live dispatched
         self.cohort_w: dict = {}       # dispatch round -> (M,) weight vector
         self.cohort_gen: dict = {}     # dispatch round -> re-key generation
+        # dispatch-time sum(base_w): the ring quantizer's shared grid is
+        # normalized by it, so the fold's decode needs the ORIGINAL W even
+        # after a re-key zeroes dropped slots in cohort_w
+        self.cohort_W0: dict = {}      # dispatch round -> float
         self.empty_flushes = 0         # cohort-atomic flushes with no
         #                              # complete cohort (no server step)
         self.rekeys = 0                # cohort re-keys (dropout recovery)
@@ -274,6 +299,7 @@ class SemiSyncState:
             self.cohort_sizes.pop(r)
             self.cohort_w.pop(r, None)
             self.cohort_gen.pop(r, None)
+            self.cohort_W0.pop(r, None)
 
     # ---- checkpointing (fedavg.run_federated_training) -------------------
     def to_tree(self):
@@ -297,6 +323,8 @@ class SemiSyncState:
                 [self.cohort_sizes[r] for r in rounds], np.int64),
             "cohort_gens": np.asarray(
                 [self.cohort_gen.get(r, 0) for r in rounds], np.int64),
+            "cohort_W0": np.asarray(
+                [self.cohort_W0.get(r, 0.0) for r in rounds], np.float64),
             "cohort_w": (np.stack([np.asarray(self.cohort_w[r], np.float32)
                                    for r in rounds])
                          if rounds else np.zeros((0, 0), np.float32)),
@@ -319,6 +347,11 @@ class SemiSyncState:
             ss.cohort_sizes[int(r)] = int(tree["cohort_sizes"][i])
             ss.cohort_gen[int(r)] = int(tree["cohort_gens"][i])
             ss.cohort_w[int(r)] = np.asarray(tree["cohort_w"][i], np.float32)
+            # pre-cohort_W0 checkpoints: the weight vector was never zeroed
+            # before the field existed, so its sum is the dispatch-time W
+            w0 = tree.get("cohort_W0")
+            ss.cohort_W0[int(r)] = (float(w0[i]) if w0 is not None
+                                    else float(ss.cohort_w[int(r)].sum()))
         return ss
 
 
@@ -371,7 +404,10 @@ def _handle_timeouts(engine, round_idx: int, stream: int) -> None:
         return
 
     # cohort-atomic: recover every cohort that lost a member
-    masker = (secure_agg_mod.make_masker(engine.secure)
+    ring = transforms_mod.make_stack(engine.transform,
+                                     engine.secure).ring_spec
+    masker = (secure_agg_mod.make_masker(
+                  engine.secure, ring_bits=ring[0] if ring else 0)
               if engine.secure is not None else None)
     for r in sorted({p.dispatch_round for p in overdue}):
         cohort = [p for p in ss.pending if p.dispatch_round == r]
@@ -395,8 +431,18 @@ def _handle_timeouts(engine, round_idx: int, stream: int) -> None:
                     masker, p.delta, p.slot, w_old, old_key))
                 new_m = jax.device_get(secure_agg_mod.mask_contribution(
                     masker, p.delta, p.slot, w_new, new_key))
-                p.delta = jax.tree.map(lambda d, o, n: np.asarray(d - o + n),
-                                       p.delta, old_m, new_m)
+                if ring:
+                    # exact ring algebra: wrap(v - old + new) == the upload
+                    # the survivor would have produced under the new key
+                    # (congruent mod 2^b; one reduction restores the wire)
+                    p.delta = jax.tree.map(
+                        lambda d, o, n: _ring_wrap_np(
+                            np.asarray(d - o + n), ring[0]),
+                        p.delta, old_m, new_m)
+                else:
+                    p.delta = jax.tree.map(
+                        lambda d, o, n: np.asarray(d - o + n),
+                        p.delta, old_m, new_m)
         # survivors re-upload their (re-masked) deltas: in-flight again,
         # with a fresh dropout draw — a failed re-upload triggers the next
         # generation's recovery at a later timeout
@@ -485,7 +531,7 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
     keys = engine.round_keys(round_idx, m, stream)
     base_w = w_in if engine.weighted else (w_in > 0).astype(np.float32)
     if engine._client_fn is not None:
-        if engine.secure is not None:
+        if engine.needs_ctx:
             rk = engine.base_round_key(round_idx, stream)
             deltas, closs = engine._client_fn(
                 params, x, y, batch_idx, keys, jnp.arange(m),
@@ -495,7 +541,7 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
                                               lr, mu)
     else:
         rk = (engine.base_round_key(round_idx, stream)
-              if engine.secure is not None else None)
+              if engine.needs_ctx else None)
         deltas, closs = client_deltas(params, x, y, batch_idx, keys, lr, mu,
                                       engine.fcfg, engine.loss,
                                       engine.transform, engine.cell_impl,
@@ -512,6 +558,7 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
     ss.cohort_sizes[round_idx] = len(real)
     ss.cohort_w[round_idx] = np.asarray(base_w, np.float32).copy()
     ss.cohort_gen[round_idx] = 0
+    ss.cohort_W0[round_idx] = float(np.asarray(base_w, np.float64).sum())
 
     if not have_flush:
         # EVERYTHING in flight is a dropped upload: nothing can arrive, so
@@ -545,18 +592,59 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
                       if p.dispatch_round not in complete]
     else:
         ss.pending = [p for p in ss.pending if p.finish_time > new_clock]
+    # the ring decode needs each folded cohort's grid geometry (dispatch
+    # size M_r and dispatch-time weight sum W0_r); capture it BEFORE the
+    # sweep drops the bookkeeping of fully folded cohorts
+    cohort_meta = {r: (int(ss.cohort_w[r].shape[0]),
+                       float(ss.cohort_W0[r]))
+                   for r in {p.dispatch_round for p in arrived}}
     ss._sweep()
     ss.clock = new_clock
 
     tau = np.asarray([round_idx - p.dispatch_round for p in arrived])
     ss.late_folds += int((tau > 0).sum())
     ss.max_staleness = max(ss.max_staleness, int(tau.max(initial=0)))
-    eff_w = (np.asarray([p.weight for p in arrived])
-             * staleness_discount(tau, acfg.staleness_alpha)
+    disc = staleness_discount(tau, acfg.staleness_alpha)
+    eff_w = (np.asarray([p.weight for p in arrived]) * disc
              ).astype(np.float32)
-    d_stack, w_stack = _stack_padded(arrived, eff_w)
-    w_agg = buffered_aggregate(params, jax.tree.map(jnp.asarray, d_stack),
-                               jnp.asarray(w_stack))
+    stack = transforms_mod.make_stack(engine.transform, engine.secure)
+    ring = stack.ring_spec
+    if ring is not None:
+        # shared-grid ring uploads: decode per COHORT, host-side — wrap the
+        # cohort's summed uploads back into the ring (exact integer mask
+        # cancellation), rescale through its grid (scale * W0 recovers
+        # sum(w_i * delta_i)), apply the cohort's shared staleness discount,
+        # then divide by the usual discounted weight sum
+        bits, sensitivity = ring
+        num = jax.tree.map(lambda g: np.zeros_like(np.asarray(g)), params)
+        for r in sorted(cohort_meta):
+            members = [p for p in arrived if p.dispatch_round == r]
+            m_r, w0_r = cohort_meta[r]
+            s_r = transforms_mod.ring_scale(bits, sensitivity, m_r)
+            d_r = float(staleness_discount(round_idx - r,
+                                           acfg.staleness_alpha))
+            coef = np.float32(d_r * s_r * w0_r)
+            num = jax.tree.map(
+                lambda a, *ds: a + coef * _ring_wrap_np(
+                    np.sum(np.stack(ds), axis=0), bits),
+                num, *[p.delta for p in members])
+        denom = jnp.float32(eff_w.sum())
+        w_agg = jax.tree.map(lambda g, s: g + jnp.asarray(s) / denom,
+                             params, num)
+    elif stack.pre_weighted:
+        # float masked uploads already carry w_i: numerator weights are the
+        # discounts alone (uniform within a cohort — anything else breaks
+        # mask cancellation), denominator the discounted weight sum
+        d_stack, disc_stack = _stack_padded(arrived,
+                                            disc.astype(np.float32))
+        w_agg = buffered_aggregate_preweighted(
+            params, jax.tree.map(jnp.asarray, d_stack),
+            jnp.asarray(disc_stack), jnp.float32(eff_w.sum()))
+    else:
+        d_stack, w_stack = _stack_padded(arrived, eff_w)
+        w_agg = buffered_aggregate(params,
+                                   jax.tree.map(jnp.asarray, d_stack),
+                                   jnp.asarray(w_stack))
     losses = np.asarray([p.loss for p in arrived])
     loss = float(np.sum(eff_w * losses) / eff_w.sum())
     params, state = server_opt_mod.server_update(params, w_agg, state,

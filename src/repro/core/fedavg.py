@@ -245,6 +245,16 @@ def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
     ``round_key`` / ``slots`` / ``w_full`` args feed the pairwise masker,
     whose masks cancel in ``agg.reduce`` (a linear sum — the aggregator
     contract, see ``core/aggregation.py``).
+
+    Pre-weighted stacks (``stack.pre_weighted``: ring quantizer and/or
+    masker) fold each client's aggregation-weight share into its OWN upload
+    — the ring quantizer grids ``(w_i / W) * delta_i``, the float masker
+    ships ``w_i * delta_i + masks`` — so the aggregate here is the
+    UNWEIGHTED sum of uploads divided by ``W`` (re-weighting a masked
+    upload would break mask cancellation).  On the ring path the reduced
+    sum is additionally wrapped back into the centered ring (exact — each
+    pair's masks sum to a multiple of ``2^b``) and decoded through the
+    shared public grid scale: ``params + scale * wrap(sum of uploads)``.
     """
     locals_, client_loss = jax.vmap(
         local_update, in_axes=(None, 0, 0, 0, None, None, None, None, None))(
@@ -262,13 +272,30 @@ def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
         w_agg = jax.tree.map(lambda s: agg.reduce(s) / wsum, sums)
     else:
         deltas = jax.tree.map(lambda l, g: l - g, locals_, params)
+        w_cohort = weights if w_full is None else w_full
         deltas = apply_stack(stack, deltas, keys, slots=slots,
-                             w_full=weights if w_full is None else w_full,
-                             round_key=round_key)
-        sums, wsum_local = _weighted_sums(deltas, weights)
-        wsum = agg.reduce(wsum_local)
-        w_agg = jax.tree.map(lambda g, s: g + agg.reduce(s) / wsum,
-                             params, sums)
+                             w_full=w_cohort, round_key=round_key)
+        if stack.pre_weighted:
+            # uploads already carry their weight share — sum UNWEIGHTED
+            sums = jax.tree.map(lambda d: jnp.sum(d, axis=0), deltas)
+            wsum = agg.reduce(jnp.sum(weights))
+            ring = stack.ring_spec
+            if ring is not None:
+                bits, sensitivity = ring
+                scale = transforms_mod.ring_scale(bits, sensitivity,
+                                                  w_cohort.shape[0])
+                w_agg = jax.tree.map(
+                    lambda g, s: g + scale * transforms_mod.ring_wrap(
+                        agg.reduce(s), bits),
+                    params, sums)
+            else:
+                w_agg = jax.tree.map(lambda g, s: g + agg.reduce(s) / wsum,
+                                     params, sums)
+        else:
+            sums, wsum_local = _weighted_sums(deltas, weights)
+            wsum = agg.reduce(wsum_local)
+            w_agg = jax.tree.map(lambda g, s: g + agg.reduce(s) / wsum,
+                                 params, sums)
     loss_mean = agg.reduce(jnp.sum(weights * client_loss)) / wsum
     return w_agg, loss_mean
 
@@ -311,7 +338,8 @@ def make_pipeline_round(mesh, cfg: ForecasterConfig, loss: Callable,
     reuses one jitted round.
 
     ``round_fn(params, x, y, batch_idx, weights, keys, lr, prox_mu)``.
-    With secure aggregation the signature grows the cohort context —
+    With a cohort-aware stack (secure aggregation, or the clear ring
+    quantizer) the signature grows the cohort context —
     ``round_fn(params, x, y, batch_idx, weights, keys, slots, w_full,
     round_key, lr, prox_mu)`` — where ``slots`` (global dispatch slot ids)
     shards alongside the client data and ``w_full``/``round_key`` are
@@ -320,9 +348,13 @@ def make_pipeline_round(mesh, cfg: ForecasterConfig, loss: Callable,
     """
     agg = aggregation_mod.make_aggregator(acfg, mesh)
     pspec = agg.pspec()
-    secure_on = scfg is not None and scfg.enabled
+    # the extended (slots, w_full, round_key) signature is needed whenever
+    # the stack wants cohort context — masking, but also the clear ring
+    # quantizer (quantize_ring without masking), whose shared grid is a
+    # function of the cohort weight vector
+    needs_ctx = transforms_mod.make_stack(tcfg, scfg).needs_cohort
 
-    if not secure_on:
+    if not needs_ctx:
         def round_body(params, x, y, batch_idx, weights, keys, lr, prox_mu):
             return _pipeline_body(params, x, y, batch_idx, weights, keys, lr,
                                   prox_mu, cfg=cfg, loss=loss,
@@ -387,6 +419,11 @@ class RoundEngine:
         self.transform = flcfg.transform
         # secure aggregation (pairwise masking) + privacy accounting
         self.secure = flcfg.secure if flcfg.secure.enabled else None
+        # cohort-aware stack (masking and/or the shared-grid ring
+        # quantizer): the round fns take the extended (slots, w_full,
+        # round_key) signature
+        self.needs_ctx = transforms_mod.make_stack(
+            self.transform, self.secure).needs_cohort
         self.accountant: Optional[privacy_mod.PrivacyAccountant] = None
         if mesh is None:
             if flcfg.aggregation_config.kind != "flat":
@@ -405,11 +442,13 @@ class RoundEngine:
         # tracks a simulated wall clock and never touches the round math
         from repro.core import async_engine, latency as latency_mod
         self.async_cfg = flcfg.async_config
-        # float pairwise masks destroy the int8 wire format (ring masking is
-        # future work — ROADMAP), so masked uploads are charged fp32 bytes.
+        # ring masking keeps the quantized wire under secure aggregation
+        # (masks live in the quantizer's integer ring), so masked uploads
+        # are charged their true int<b>+scale bytes whenever quantization
+        # is on — the link budget no longer re-widens to fp32 for masking.
         # audited_payload (the flcheck level-3 auditor's statically derived
         # byte count, analysis/costs.py) overrides the formula when given.
-        wire_bits = 0 if self.secure is not None else flcfg.quantize_bits
+        wire_bits = flcfg.quantize_bits
         self.latency = latency_mod.LatencyModel(
             self.async_cfg.latency, flcfg.seed,
             latency_mod.payload_bytes(fcfg.num_params(), wire_bits,
@@ -509,10 +548,20 @@ class RoundEngine:
         dispatch size under semi-sync — those clients' data is used).
         Called by the driver per cluster; ``engine.step`` composes one
         mechanism invocation per dispatch/flush.
+
+        With secure aggregation on, the server's view is the MASKED SUM,
+        so the secure-agg-aware central-DP accountant applies (aggregate
+        Gaussian ``z_eff = z * sqrt(cohort)`` — ``privacy.
+        secure_agg_accountant``); without masking, per-client accounting.
         """
         q = min(1.0, dispatch_m / max(n_members, 1))
-        self.accountant = privacy_mod.make_accountant(
-            self.transform, self.flcfg.privacy, q)
+        if self.secure is not None:
+            self.accountant = privacy_mod.secure_agg_accountant(
+                self.transform, self.flcfg.privacy, q,
+                secure_enabled=True, cohort=dispatch_m)
+        else:
+            self.accountant = privacy_mod.make_accountant(
+                self.transform, self.flcfg.privacy, q)
 
     def step(self, params, state, x, y, batch_idx, weights,
              round_idx: int = 0, stream: int = 0):
@@ -563,9 +612,9 @@ class RoundEngine:
         m = x.shape[0]
         keys = self.round_keys(round_idx, m, stream)
         rk = (self.base_round_key(round_idx, stream)
-              if self.secure is not None else None)
+              if self.needs_ctx else None)
         if self._sharded is not None:
-            if self.secure is not None:
+            if self.needs_ctx:
                 # slots shard with the clients; the cohort weight vector and
                 # round key replicate so every shard masks vs the whole set
                 w_agg, loss = self._sharded(params, x, y, batch_idx, w, keys,
@@ -660,6 +709,10 @@ def _restore_async_state(flat, n_pending: int, params):
         "cohort_gens": flat["cur/async/cohort_gens"],
         "cohort_w": flat["cur/async/cohort_w"],
     }
+    # dispatch-time weight sums (ring-decode geometry); absent in
+    # pre-ring checkpoints — from_tree then falls back to sum(cohort_w)
+    if "cur/async/cohort_W0" in flat:
+        tree["cohort_W0"] = flat["cur/async/cohort_W0"]
     return async_engine.SemiSyncState.from_tree(tree)
 
 

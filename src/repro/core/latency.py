@@ -77,10 +77,12 @@ def payload_bytes(n_params: int, quantize_bits: int = 0,
     model: fp32, or ``quantize_bits``-bit ints when the quantize transform
     is on (per-leaf scale overhead is a few floats on a ~140k-param model —
     ignored; the auditor counts it and reports the delta as a tracked
-    divergence).  Callers must pass ``quantize_bits=0`` when secure-agg
-    masking is on: the float pairwise masks destroy the int8 wire format,
-    so the masked upload is fp32 regardless of the quantize stage
-    (``RoundEngine`` does this; the auditor reports the same regression)."""
+    divergence).  The quantized wire SURVIVES secure-agg masking: ring
+    masks live in the quantizer's integer ring mod 2^b
+    (``core/secure_agg.py``), so masked uploads are charged the same
+    ``quantize_bits``-bit payload as clear ones — the uplink the paper's
+    scalability pitch needs (``RoundEngine`` passes ``quantize_bits``
+    unchanged with masking on, and the auditor proves the format)."""
     if audited_bytes is not None:
         return float(audited_bytes)
     if quantize_bits:

@@ -32,12 +32,18 @@ Honesty notes (also in docs/privacy.md):
 * Accounting needs a bounded sensitivity AND noise: with ``clip_norm == 0``
   or ``noise_multiplier == 0`` the accountant is *disabled* and reports
   ``epsilon = inf`` rather than a vacuous number.
-* We account the server's per-client view with multiplier ``z`` — each
-  client's delta is individually noised, so the release of the whole round
-  is a Gaussian mechanism of multiplier ``z`` per contribution.  With
-  secure aggregation the server only sees the SUM (noise std ``z*C*sqrt(m)``
-  on sensitivity ``C``), so ``z`` remains a valid — now conservative —
-  bound.
+* Two accounting MODES.  ``per-client`` (the default) accounts the
+  server's per-client view with multiplier ``z`` — each client's delta is
+  individually noised, so the release of the whole round is a Gaussian
+  mechanism of multiplier ``z`` per contribution.  ``central:secure-agg``
+  (``secure_agg_accountant``; selected by the engine when pairwise masking
+  is on) accounts the only value the masked protocol reveals — the SUM —
+  on which the ``m`` independent per-client noises add in variance to an
+  aggregate Gaussian of std ``z*C*sqrt(m)`` on sensitivity ``C``, i.e. an
+  effective multiplier ``z_eff = z*sqrt(m)``: a strictly tighter epsilon at
+  the same per-client noise.  The central mode is only sound when masking
+  actually hides the individual uploads, so it is DISABLED (with the
+  reason) when secure aggregation is off.
 * Selection is fixed-size sampling without replacement; the bound assumes
   Poisson sampling at the same expected rate, the standard approximation in
   DP-FedAvg implementations.
@@ -126,9 +132,11 @@ class PrivacyAccountant:
     def __init__(self, noise_multiplier: float, sample_rate: float,
                  delta: float = 1e-5,
                  orders: Sequence[int] = DEFAULT_ORDERS,
-                 disabled_reason: Optional[str] = None):
+                 disabled_reason: Optional[str] = None,
+                 mode: str = "per-client"):
         self.noise_multiplier = float(noise_multiplier)
         self.sample_rate = float(sample_rate)
+        self.mode = mode
         self.delta = float(delta)
         self.orders = tuple(int(o) for o in orders)
         self.rounds = 0
@@ -180,6 +188,7 @@ class PrivacyAccountant:
             "rounds": self.rounds,
             "noise_multiplier": self.noise_multiplier,
             "sample_rate": self.sample_rate,
+            "mode": self.mode,
             **({"disabled_reason": self.disabled_reason}
                if not self.active else {}),
         }
@@ -209,12 +218,56 @@ def make_accountant(tcfg: TransformConfig, pcfg: PrivacyConfig,
     return PrivacyAccountant(tcfg.noise_multiplier, q, pcfg.delta, orders)
 
 
+def secure_agg_accountant(tcfg: TransformConfig, pcfg: PrivacyConfig,
+                          sample_rate: float, secure_enabled: bool,
+                          cohort: int) -> PrivacyAccountant:
+    """Central-DP accountant for the MASKED SUM (mode ``central:secure-agg``).
+
+    With pairwise masking on, the server never observes an individual
+    upload — only the aggregate, carrying the sum of ``cohort`` independent
+    per-client Gaussian draws: noise std ``z*C*sqrt(cohort)`` against the
+    one-client sensitivity ``C``, so the composed mechanism is a subsampled
+    Gaussian with the effective multiplier ``z_eff = z*sqrt(cohort)`` —
+    strictly tighter than the per-client ``z`` for any cohort > 1.  When
+    masking is OFF the central view does not exist (the server sees every
+    upload individually), so this returns a DISABLED accountant with the
+    reason instead of a guarantee the protocol does not provide.
+    """
+    q = min(max(float(sample_rate), 0.0), 1.0)
+    orders = pcfg.orders or DEFAULT_ORDERS
+    mode = "central:secure-agg"
+    if not secure_enabled:
+        return PrivacyAccountant(
+            0.0, q, pcfg.delta, orders, mode=mode,
+            disabled_reason="secure aggregation is off (no masked sum to "
+                            "account centrally; per-client accounting "
+                            "applies instead)")
+    if tcfg.noise_multiplier <= 0.0:
+        return PrivacyAccountant(0.0, q, pcfg.delta, orders, mode=mode,
+                                 disabled_reason="dp_noise is 0 (no "
+                                                 "Gaussian mechanism)")
+    if tcfg.clip_norm <= 0.0:
+        return PrivacyAccountant(0.0, q, pcfg.delta, orders, mode=mode,
+                                 disabled_reason="dp_clip is 0 (unbounded "
+                                                 "sensitivity)")
+    if q <= 0.0:
+        return PrivacyAccountant(0.0, q, pcfg.delta, orders, mode=mode,
+                                 disabled_reason="sampling rate is 0")
+    if cohort < 1:
+        return PrivacyAccountant(0.0, q, pcfg.delta, orders, mode=mode,
+                                 disabled_reason="empty dispatch cohort")
+    z_eff = tcfg.noise_multiplier * math.sqrt(cohort)
+    return PrivacyAccountant(z_eff, q, pcfg.delta, orders, mode=mode)
+
+
 def format_report(report: Dict[str, float]) -> str:
     """Human-readable accountant line for the drivers/bench."""
+    mode = report.get("mode", "per-client")
     if not report["enabled"]:
-        return (f"privacy: accounting disabled — {report['disabled_reason']}"
+        return (f"privacy [{mode}]: accounting disabled — "
+                f"{report['disabled_reason']}"
                 " (set --dp-clip and --dp-noise to certify a guarantee)")
-    return (f"privacy: (eps={report['epsilon']:.2f}, "
+    return (f"privacy [{mode}]: (eps={report['epsilon']:.2f}, "
             f"delta={report['delta']:.0e}) after {report['rounds']} rounds "
-            f"(z={report['noise_multiplier']}, "
+            f"(z_eff={report['noise_multiplier']:.3g}, "
             f"q={report['sample_rate']:.3g})")

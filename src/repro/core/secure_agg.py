@@ -8,10 +8,43 @@ that gap with the classic pairwise-masking construction (Bonawitz et al.,
 ``(i, j)`` in a dispatch cohort derives a SHARED mask from the cohort's
 round key, client ``min(i,j)`` adds it and client ``max(i,j)`` subtracts it,
 so each upload is individually high-variance noise while the masks cancel
-exactly in the aggregator's sum:
+exactly in the aggregator's sum.
 
-    y_i = T(delta_i) + (1/w_i) * sum_{j != i} sign(i,j) * PRG(key_{ij})
-    sum_i w_i * y_i = sum_i w_i * T(delta_i)        (masks cancel)
+**Weighted-contribution masking.**  The upload is the client's WEIGHTED
+contribution with raw antisymmetric masks on top — never a ``1/w_i``-scaled
+mask on the bare delta:
+
+    float path:  y_i = w_i * T(delta_i) + sum_{j != i} sign(i,j) PRG(key_ij)
+    ring path:   y_i = wrap_b( q_i      + sum_{j != i} sign(i,j) U(key_ij) )
+
+so ``sum_i y_i = sum_i w_i * T(delta_i)`` (masks cancel pair-by-pair in the
+UNWEIGHTED sum of uploads; the aggregator divides by ``W = sum_i w_i``
+afterwards).  Mask strength on the wire is therefore independent of the
+client's aggregation weight — a heavy client is masked exactly as hard as a
+light one, closing the ``1/w_i`` secrecy gap documented in docs/privacy.md.
+
+**Ring masking (quantize + mask).**  When the stack carries the shared-grid
+ring quantizer (``transforms.StochasticQuantize(ring=True)`` — forced on
+whenever masking and quantization are both enabled), the masker operates in
+the quantizer's integer ring mod ``2^b``: ``q_i`` is the client's integer
+grid value (its cohort-normalized weighted contribution, already carrying
+``w_i / W``), the per-pair masks ``U(key_ij)`` are drawn UNIFORMLY over
+``[0, 2^b)``, and the masked value is reduced back into the centered ring
+(``transforms.ring_wrap``).  Wraparound makes each masked coordinate
+information-theoretically uniform over the ring — one ``b``-bit symbol
+per coordinate, so the wire stays ``int<b>+scale`` under masking — and
+cancellation is EXACT integer arithmetic: the aggregator's ring-reduced sum
+equals the unmasked sum bit-for-bit (``ring_wrap`` is a ring homomorphism
+and each pair's masks sum to a multiple of ``2^b``).  The only residual
+metadata is the shared public grid scale, which is derived from the
+configured clip bound — it leaks no client's data (docs/privacy.md).
+
+**Float masking (mask without quantize).**  Without an integer grid the
+masks are Gaussian with scale ``mask_std`` on the weighted contribution;
+cancellation is exact up to float rounding (two roundings per pair term),
+which is why the float-path masked == clear pins are float-tolerance while
+the ring-path pins are bitwise.  ``mask_std`` is ignored in ring mode —
+uniform-over-the-ring is as masked as the wire format allows.
 
 Key points of this implementation:
 
@@ -21,24 +54,12 @@ Key points of this implementation:
   per-client transforms it needs cohort context — its own dispatch slot, the
   cohort's aggregation-weight vector, and the shared round key — passed as a
   :class:`CohortContext` by the stack.
-* **Masks cancel in the WEIGHTED sum.**  The aggregate is
-  ``sum_i w_i * T(delta_i) / sum_i w_i``, so raw antisymmetric masks would
-  NOT cancel under unequal weights.  Each client therefore scales its total
-  mask by ``1/w_i`` (its own weight — the sample count the server already
-  knows for weighted FedAvg), making the post-weighting mask contribution
-  ``+mask_ij - mask_ij`` per pair.  Cancellation is exact up to float
-  rounding (two roundings per pair term), which is why the masked == clear
-  pins are float-tolerance, not bitwise.  Consequently ``mask_std`` is the
-  mask scale on the client's *weighted* contribution ``w_i * y_i`` (the
-  quantity the server actually sums); the raw upload ``y_i`` carries
-  ``mask_std * sqrt(cohort-1) / w_i`` — under count-weighted aggregation,
-  size ``mask_std`` relative to ``w * ||delta||``, not ``||delta||``.
-  Under uniform aggregation (weights 0/1) the two coincide.
 * **Weight-0 pads are excluded.**  Mesh-divisibility pads enter the round
-  with weight 0, so their (weighted) uploads vanish from the sum — a mask
-  shared with a pad could never cancel.  Pair masks are gated on BOTH
-  endpoints having ``w > 0``, so the mask cohort is exactly the real
-  dispatch set.
+  with weight 0, so their uploads vanish from the sum — a mask shared with
+  a pad could never cancel.  Pair masks are gated on BOTH endpoints having
+  ``w > 0``, so the mask cohort is exactly the real dispatch set, and pad
+  uploads are zeroed outright (a pad is a cycled DUPLICATE of a real
+  client; sending its delta in the clear would leak that client's update).
 * **Topology-independent.**  Mask generation is a pure function of
   ``(round key, slot pair)`` — no client-to-client communication — so each
   client computes its masks locally inside the vmap/shard_map round body and
@@ -49,13 +70,14 @@ Key points of this implementation:
   cohort's masks cancel only when the whole cohort folds together; enabling
   secure aggregation forces ``AsyncConfig.cohort_atomic`` folds
   (``core/async_engine.py``), under which a late cohort folds as one group
-  with one shared staleness discount — the discount scales every member's
-  mask equally, preserving cancellation.
+  with one shared staleness discount — applied AFTER the ring decode on the
+  ring path, and scaling every member's mask equally on the float path, so
+  cancellation is preserved either way.
 
-Simulation caveat (see docs/privacy.md): real deployments mask in a finite
-integer ring (mod ``2^b``) where the masked value is information-
-theoretically uniform; we simulate additive masking in float32, which
-demonstrates the cancellation algebra and its cost, not bit-level secrecy.
+Simulation caveat (see docs/privacy.md): ring arithmetic is simulated with
+float32-encoded integers (exact below 2^24), so the cancellation algebra,
+the wire format, and the uniformity of masked uploads are all real; only
+the storage type differs from a deployment's int8 buffers.
 """
 from __future__ import annotations
 
@@ -68,6 +90,7 @@ import jax.numpy as jnp
 
 from repro.analysis import taint
 from repro.configs.base import SecureAggConfig
+from repro.core import transforms as transforms_mod
 
 PyTree = Any
 
@@ -103,18 +126,23 @@ class CohortContext(NamedTuple):
 class PairwiseMasker:
     """Cohort-aware ``DeltaTransform``: add the antisymmetric pairwise masks.
 
-    For client ``i`` the total mask is ``sum_{j != i} sign(i,j) * mask_std *
-    N(key_{ij})`` with ``key_{ij}`` derived from (round key, min(i,j),
+    For client ``i`` the total mask is ``sum_{j != i} sign(i,j) *
+    draw(key_{ij})`` with ``key_{ij}`` derived from (round key, min(i,j),
     max(i,j)) — both endpoints derive the SAME draw and opposite signs.
-    Pairs are gated on both endpoints being real (``w > 0``), and the total
-    is scaled by ``1/w_i`` so the masks cancel in the weighted aggregator
-    sum (see module docstring).  Memory is O(params) per client: masks
-    accumulate over cohort slots via ``lax.scan``, never materializing the
-    (M, params) mask set.
+    ``bits = 0`` is the float path (Gaussian draws scaled ``mask_std``,
+    added to the weighted contribution ``w_i * delta_i``); ``bits = b > 0``
+    is the ring path (draws uniform over ``[0, 2^b)``, added to the ring
+    quantizer's integer grid and wrapped back into the centered ring — the
+    input already carries its weight share, see the module docstring).
+    Pairs are gated on both endpoints being real (``w > 0``).  Memory is
+    O(params) per client: masks accumulate over cohort slots via
+    ``lax.scan``, never materializing the (M, params) mask set.
     """
     mask_std: float = 1.0
+    bits: int = 0                      # 0 = float masks; b = ring mod 2^b
     tag: ClassVar[int] = 3             # stable PRNG stream id (stack slot)
     needs_cohort: ClassVar[bool] = True
+    is_masker: ClassVar[bool] = True   # stack predicate (pre-weighted sums)
 
     def __call__(self, delta: PyTree, key: jax.Array,
                  ctx: CohortContext) -> PyTree:
@@ -123,47 +151,60 @@ class PairwiseMasker:
         i = ctx.slot
         base = jax.random.fold_in(ctx.round_key, _PAIR_DOMAIN)
         leaves, treedef = jax.tree.flatten(delta)
+        ring = self.bits > 0
 
         def add_pair(acc, j):
             lo, hi = jnp.minimum(i, j), jnp.maximum(i, j)
             pair_key = jax.random.fold_in(jax.random.fold_in(base, lo), hi)
             sign = jnp.where(i < j, 1.0, -1.0)
             gate = ((w[i] > 0) & (w[j] > 0) & (j != i))
-            coef = (sign * gate * self.mask_std).astype(jnp.float32)
+            scale = 1.0 if ring else self.mask_std
+            coef = (sign * gate * scale).astype(jnp.float32)
             ks = jax.random.split(pair_key, len(leaves))
-            acc = [a + coef * jax.random.normal(k, a.shape, a.dtype)
-                   for a, k in zip(acc, ks)]
+            if ring:
+                draws = [jax.random.randint(k, a.shape, 0, 2 ** self.bits
+                                            ).astype(a.dtype)
+                         for a, k in zip(acc, ks)]
+            else:
+                draws = [jax.random.normal(k, a.shape, a.dtype)
+                         for a, k in zip(acc, ks)]
+            acc = [a + coef * d for a, d in zip(acc, draws)]
             return acc, None
 
         zeros = [jnp.zeros_like(x) for x in leaves]
         masks, _ = jax.lax.scan(add_pair, zeros, jnp.arange(w.shape[0]))
-        # scale by 1/w_i so the weighted sum sees the raw antisymmetric
-        # masks.  Weight-0 pads are CYCLED DUPLICATES of real clients
-        # (fedavg mesh-divisibility padding): they can't join the mask
-        # cohort (their masks would never cancel), so their upload must be
-        # ZEROED, not sent in the clear — a pad slot leaking its
-        # duplicate's delta unmasked would hand the server exactly the
-        # per-client view masking exists to prevent.  Their weight is 0,
-        # so the aggregate is unchanged.
+        # pads (weight 0) upload ZERO — they can't join the mask cohort,
+        # and their delta in the clear would leak the duplicated client's
+        # update.  Their weight is 0, so the aggregate is unchanged.
         real_i = (w[i] > 0).astype(jnp.float32)
-        inv_w = jnp.where(w[i] > 0, 1.0 / jnp.maximum(w[i], 1e-30), 0.0)
-        out = [real_i * (x + mk * inv_w) for x, mk in zip(leaves, masks)]
-        # taint marker (production no-op): this stage's flcheck label.  The
-        # wire declaration re-WIDENS the upload: float pairwise masks do not
-        # fit any integer grid, so a masked upload ships fp32 even when the
-        # quantize stage ran first — the tracked divergence the level-3
-        # cost auditor reports against latency.payload_bytes (ring masking
-        # on the quantizer's grid is the ROADMAP buy-back).
+        if ring:
+            # input is the ring quantizer's integer grid (already carries
+            # w_i / W); uniform masks + wraparound make each coordinate
+            # uniform over the ring, and cancellation is exact integers
+            out = [real_i * transforms_mod.ring_wrap(x + mk, self.bits)
+                   for x, mk in zip(leaves, masks)]
+            wire = f"int{self.bits}+scale"
+        else:
+            # weighted-contribution masking: mask w_i * delta_i directly,
+            # so upload secrecy never depends on the weight
+            out = [real_i * (w[i] * x + mk) for x, mk in zip(leaves, masks)]
+            wire = "float32"
+        # taint marker (production no-op): this stage's flcheck label.  On
+        # the ring path the declared wire encoding STAYS the quantizer's
+        # int<b>+scale — masked coordinates are b-bit ring symbols — which
+        # is exactly what the level-3 cost auditor proves end-to-end.  The
+        # float path (no quantizer) ships fp32, same as its input.
         return taint.declassify(jax.tree.unflatten(treedef, out), "mask",
-                                wire="float32")
+                                wire=wire)
 
 
 @functools.partial(jax.jit, static_argnames=("masker",))
 def mask_contribution(masker: PairwiseMasker, like: PyTree, slot, weights,
                       round_key) -> PyTree:
     """The mask-ONLY term of a masked upload: ``PairwiseMasker`` applied to
-    a zero delta, i.e. ``real_i * mask_i / w_i`` for dispatch slot ``slot``
-    under cohort weights ``weights`` and shared key ``round_key``.
+    a zero delta — ``real_i * sum_j sign * PRG(key_ij)`` for dispatch slot
+    ``slot`` under cohort weights ``weights`` and shared key ``round_key``
+    (ring-wrapped on the ring path).
 
     This is the algebraic basis of Bonawitz-style dropout recovery without
     the server ever holding a pre-mask delta: a survivor's re-keyed upload is
@@ -171,11 +212,13 @@ def mask_contribution(masker: PairwiseMasker, like: PyTree, slot, weights,
         y_i' = y_i - mask_contribution(old_key, w_old)
                    + mask_contribution(new_key, w_new)
 
-    where ``w_new`` zeroes the dropped slots.  The subtraction replays the
-    EXACT ops of the original masking (same scan, same pair keys), so the old
-    mask cancels to one float rounding per leaf, and the new masks cancel
-    over the surviving set in the weighted aggregate as usual.  ``like`` only
-    supplies shapes/dtypes.
+    where ``w_new`` zeroes the dropped slots (on the ring path the rewrite
+    is reduced back into the ring — exact ring subtraction, see
+    ``async_engine._handle_timeouts``).  The subtraction replays the EXACT
+    ops of the original masking (same scan, same pair keys), so the old
+    mask cancels — bit-exactly in the ring, to one float rounding per leaf
+    on the float path — and the new masks cancel over the surviving set in
+    the aggregate as usual.  ``like`` only supplies shapes/dtypes.
     """
     ctx = CohortContext(jnp.asarray(slot, jnp.int32),
                         jnp.asarray(weights, jnp.float32), round_key)
@@ -186,9 +229,11 @@ def mask_contribution(masker: PairwiseMasker, like: PyTree, slot, weights,
     return masker(zeros, round_key, ctx)
 
 
-def make_masker(cfg: SecureAggConfig) -> PairwiseMasker:
-    """Build the pairwise-masking stage a ``SecureAggConfig`` asks for."""
+def make_masker(cfg: SecureAggConfig, ring_bits: int = 0) -> PairwiseMasker:
+    """Build the pairwise-masking stage a ``SecureAggConfig`` asks for.
+    ``ring_bits`` (set by ``transforms.make_stack`` when the stack carries
+    the ring quantizer) selects ring masking mod ``2^ring_bits``."""
     if not cfg.enabled:
         raise ValueError("make_masker called with secure aggregation "
                          "disabled (SecureAggConfig.enabled=False)")
-    return PairwiseMasker(mask_std=cfg.mask_std)
+    return PairwiseMasker(mask_std=cfg.mask_std, bits=int(ring_bits))

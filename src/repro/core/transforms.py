@@ -28,14 +28,30 @@ Knob -> literature map (see PAPERS.md):
     the wire format (quantize then dequantize) so aggregation math stays in
     float.
 
+``TransformConfig.quantize_ring``
+    Shared-grid RING quantizer — the wire format secure aggregation masks
+    in (forced on whenever masking + quantization are both enabled, and
+    available standalone as the bit-exact clear comparator).  Instead of a
+    per-leaf data-dependent scale, every cohort member quantizes its
+    cohort-normalized weighted contribution ``(w_i / W) * delta_i`` onto
+    ONE public grid ``s = sensitivity / levels`` (sensitivity = clip norm,
+    falling back to 1), with ``levels = 2^(b-1) - 1 - M`` reserving ``M``
+    grid steps of stochastic-rounding headroom so the cohort's integer sum
+    provably fits the ring.  The output is the integer grid itself (not a
+    dequantized float): the aggregator sums uploads UNWEIGHTED, reduces the
+    sum into the ring, and rescales — see ``fedavg._pipeline_body``.
+
 ``SecureAggConfig.enabled``
     Pairwise masking (``core/secure_agg.py``): antisymmetric per-pair masks
     derived from the cohort's shared round key, added LAST in the stack so
     the upload that crosses the wire is individually noise but the masks
     cancel in the aggregator sum — actual secure aggregation on top of the
-    DP/compression stack.  It is a *cohort-aware* transform: the stack
-    threads it a :class:`~repro.core.secure_agg.CohortContext` (own slot,
-    cohort weights, shared round key) in addition to the per-client key.
+    DP/compression stack.  With the quantize stage on the masker operates
+    in the ring mod ``2^b`` (uniform integer masks, exact wraparound
+    cancellation); otherwise it adds Gaussian masks to the weighted float
+    upload.  It is a *cohort-aware* transform: the stack threads it a
+    :class:`~repro.core.secure_agg.CohortContext` (own slot, cohort
+    weights, shared round key) in addition to the per-client key.
 
 Transforms compose as a :class:`TransformStack` in the fixed order
 clip -> noise -> quantize -> mask (sensitivity bound first, privacy second,
@@ -78,6 +94,40 @@ def global_l2_norm(tree: PyTree) -> jax.Array:
                         for x in jax.tree.leaves(tree)))
 
 
+# ------------------------------------------------------------ ring helpers
+def ring_levels(bits: int, cohort: int) -> int:
+    """Grid levels of the shared ring quantizer: ``2^(bits-1) - 1 - M``.
+
+    The ``M`` reserved steps are stochastic-rounding headroom — each cohort
+    member's rounding can overshoot its weight share by at most one grid
+    step, so the cohort's integer sum is bounded by ``levels + M`` and the
+    ring decode ``wrap(sum)`` is exact, never an aliased wraparound.
+    """
+    levels = 2 ** (bits - 1) - 1 - int(cohort)
+    if levels < 1:
+        raise ValueError(
+            f"dispatch cohort of {cohort} does not fit the int{bits} ring: "
+            f"need cohort <= {2 ** (bits - 1) - 2} so the shared grid "
+            "keeps >= 1 level after rounding headroom")
+    return levels
+
+
+def ring_scale(bits: int, sensitivity: float, cohort: int) -> float:
+    """Public grid step of the shared ring quantizer (one float for the
+    whole cohort — the +4-byte wire scale field, and the only residual
+    metadata a masked upload carries)."""
+    return float(sensitivity) / ring_levels(bits, cohort)
+
+
+def ring_wrap(x, bits: int):
+    """Reduce integer-valued ``x`` into the centered ring
+    ``[-2^(bits-1), 2^(bits-1) - 1]`` (i.e. mod ``2^bits``).  Exact for
+    float32-encoded integers below 2^24 — the simulation's stand-in for
+    int arithmetic that overflows by construction."""
+    half = float(2 ** (bits - 1))
+    return jnp.mod(x + half, float(2 ** bits)) - half
+
+
 @dataclasses.dataclass(frozen=True)
 class L2Clip:
     """Scale the whole delta so its global L2 norm is at most ``clip_norm``."""
@@ -109,31 +159,61 @@ class GaussianNoise:
 
 @dataclasses.dataclass(frozen=True)
 class StochasticQuantize:
-    """Unbiased ``bits``-bit integer quantize/dequantize, per-leaf scaling.
+    """Unbiased ``bits``-bit integer quantization, two grids:
 
-    Each leaf is scaled by ``max|x| / (2^(bits-1) - 1)`` to the signed integer
-    grid, stochastically rounded (``floor(x/s + u)``, ``u ~ U[0,1)`` — exact
-    in expectation), then dequantized.  Round-trip error is bounded by one
-    grid step ``s`` per coordinate; an all-zero leaf round-trips to zero.
+    *Adaptive (default, ``ring=False``)*: each leaf is scaled by
+    ``max|x| / (2^(bits-1) - 1)`` to the signed integer grid, stochastically
+    rounded (``floor(x/s + u)``, ``u ~ U[0,1)`` — exact in expectation),
+    then dequantized.  Round-trip error is bounded by one grid step ``s``
+    per coordinate; an all-zero leaf round-trips to zero.
+
+    *Ring (``ring=True``, cohort-aware)*: every cohort member quantizes its
+    cohort-normalized weighted contribution ``(w_i / W) * x`` onto ONE
+    public grid ``s = sensitivity / ring_levels(bits, M)`` and returns the
+    INTEGER grid values themselves (float32-encoded ints), clipped to this
+    client's weight share ``floor((w_i/W) * levels) + 1`` — the per-client
+    cap that bounds the cohort's integer sum inside the ring.  This is the
+    grid secure-agg masks live on (``core/secure_agg.py``); the aggregator
+    decodes with ``ring_wrap`` + ``ring_scale`` (``fedavg._pipeline_body``).
+    A data-INdependent grid means the wire scale leaks only the configured
+    clip bound, not any client's delta magnitude.
     """
     bits: int = 8
+    ring: bool = False
+    sensitivity: float = 1.0           # ring grid bound (clip norm, or 1)
     tag: ClassVar[int] = 2             # stable PRNG stream id
 
-    def __call__(self, delta: PyTree, key: jax.Array) -> PyTree:
-        levels = float(2 ** (self.bits - 1) - 1)       # int8 -> 127
+    @property
+    def needs_cohort(self) -> bool:
+        return self.ring               # ring grid needs (slot, weights)
+
+    def __call__(self, delta: PyTree, key: jax.Array, ctx=None) -> PyTree:
         leaves, treedef = jax.tree.flatten(delta)
         keys = jax.random.split(key, len(leaves))
         out = []
-        for x, k in zip(leaves, keys):
-            scale = jnp.max(jnp.abs(x)) / levels
-            safe = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
-            u = jax.random.uniform(k, x.shape)
-            q = jnp.clip(jnp.floor(x / safe + u), -levels, levels)
-            out.append((q * safe).astype(x.dtype))
+        if self.ring:
+            levels = ring_levels(self.bits, ctx.weights.shape[0])
+            scale = self.sensitivity / levels
+            w = ctx.weights
+            frac = w[ctx.slot] / jnp.maximum(jnp.sum(w), 1e-30)
+            qmax = jnp.floor(frac * levels) + 1.0
+            for x, k in zip(leaves, keys):
+                u = jax.random.uniform(k, x.shape)
+                q = jnp.clip(jnp.floor(frac * x / scale + u), -qmax, qmax)
+                out.append(q.astype(x.dtype))
+        else:
+            levels = float(2 ** (self.bits - 1) - 1)   # int8 -> 127
+            for x, k in zip(leaves, keys):
+                sc = jnp.max(jnp.abs(x)) / levels
+                safe = jnp.maximum(sc, jnp.finfo(jnp.float32).tiny)
+                u = jax.random.uniform(k, x.shape)
+                q = jnp.clip(jnp.floor(x / safe + u), -levels, levels)
+                out.append((q * safe).astype(x.dtype))
         # taint marker (production no-op): this stage's flcheck label.  The
         # wire declaration is what the level-3 cost auditor reads off the
-        # boundary: the simulated-dequantize floats above STAND FOR an
-        # int<bits> grid + one fp32 scale per leaf on the real uplink.
+        # boundary: the values above STAND FOR an int<bits> grid + one fp32
+        # scale per leaf on the real uplink (adaptive: simulated-dequantize
+        # floats; ring: the shared-grid integers themselves).
         return taint.declassify(jax.tree.unflatten(treedef, out), "quantize",
                                 wire=f"int{self.bits}+scale")
 
@@ -166,6 +246,25 @@ class TransformStack:
         (slot / weights / shared round key) — see ``core/secure_agg.py``."""
         return any(getattr(t, "needs_cohort", False) for t in self.transforms)
 
+    @property
+    def ring_spec(self):
+        """``(bits, sensitivity)`` of the shared-grid ring quantizer when
+        the stack carries one, else None — the engine's signal to decode
+        the aggregate with ``ring_wrap``/``ring_scale``."""
+        for t in self.transforms:
+            if isinstance(t, StochasticQuantize) and t.ring:
+                return (t.bits, t.sensitivity)
+        return None
+
+    @property
+    def pre_weighted(self) -> bool:
+        """True when uploads already carry their aggregation weight — the
+        ring quantizer folds in ``w_i / W``, the masker folds in ``w_i``
+        (weighted-contribution masking) — so the aggregator must sum them
+        UNWEIGHTED (weighting twice would double-count)."""
+        return self.ring_spec is not None or any(
+            getattr(t, "is_masker", False) for t in self.transforms)
+
     def __call__(self, delta: PyTree, key: jax.Array, ctx=None) -> PyTree:
         seen: dict = {}
         for t in self.transforms:
@@ -190,14 +289,22 @@ def make_stack(cfg: TransformConfig,
     ``TransformConfig`` (+ optional ``SecureAggConfig``), the
     ``FLConfig.transform`` / ``FLConfig.secure`` facade views."""
     ts = []
+    secure_on = secure is not None and secure.enabled
+    sensitivity = cfg.clip_norm if cfg.clip_norm > 0.0 else 1.0
+    # masking + quantization compose in the quantizer's integer ring: the
+    # shared-grid ring quantizer is forced on so the masks have an integer
+    # grid to be uniform over (and the wire stays int<b>+scale)
+    ring = bool(cfg.quantize_bits) and (cfg.quantize_ring or secure_on)
     if cfg.clip_norm > 0.0:
         ts.append(L2Clip(cfg.clip_norm))
     if cfg.noise_multiplier > 0.0:
-        sensitivity = cfg.clip_norm if cfg.clip_norm > 0.0 else 1.0
         ts.append(GaussianNoise(cfg.noise_multiplier * sensitivity))
     if cfg.quantize_bits:
-        ts.append(StochasticQuantize(cfg.quantize_bits))
-    if secure is not None and secure.enabled:
+        ts.append(StochasticQuantize(cfg.quantize_bits, ring=ring,
+                                     sensitivity=sensitivity if ring
+                                     else 1.0))
+    if secure_on:
         from repro.core import secure_agg  # late: secure_agg is a leaf module
-        ts.append(secure_agg.make_masker(secure))
+        ts.append(secure_agg.make_masker(
+            secure, ring_bits=cfg.quantize_bits if ring else 0))
     return TransformStack(tuple(ts))

@@ -31,14 +31,16 @@ python -m pytest -q "$@"
 
 # Default run also smokes the streaming client-window path (1 round over a
 # 1000-client population, O(m) per round) so 10k+ scaling can't silently rot,
-# then the full pipeline: DP clip + noise + int8-quantized deltas aggregated
-# edge->region->cloud over the 2x4 (region, clients) mesh.
+# then the full pipeline: DP clip + noise + RING-masked int8 deltas (masking
+# + quantization compose in the quantizer's integer ring — the secure-agg
+# wire stays int8+scale, asserted by the audited byte table the smoke
+# prints) aggregated edge->region->cloud over the 2x4 (region, clients) mesh.
 if [ "$#" -eq 0 ]; then
   echo "== bench_scalability smoke (streaming provider, 1 round)"
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_scalability.py \
       --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke
-  echo "== bench_scalability smoke (DP + quantize + secure-agg + hierarchical, 1 round)"
+  echo "== bench_scalability smoke (DP + ring-masked int8 + hierarchical, 1 round)"
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_scalability.py \
       --clients 1000 --rounds 1 --clients-per-round 16 --days 30 --smoke \
@@ -49,16 +51,18 @@ if [ "$#" -eq 0 ]; then
     python benchmarks/bench_scalability.py \
       --clients 200 --rounds 3 --clients-per-round 8 --days 30 --smoke \
       --mode semi_sync --stragglers lognormal --over-select 1.5
-  # churn axis: nonzero dropout with secure-agg cohort re-key.  buffer_k is
-  # pinned to m' = ceil(1.5*8) = 12 (wait-for-cohort) because cohort-atomic
-  # folds at a k-th-arrival clock need >=4 rounds AND a full-cohort flush
-  # threshold to complete any fold in a smoke-sized run.
-  echo "== bench_scalability smoke (client churn + dropout, secure-agg re-key)"
+  # churn axis: nonzero dropout with secure-agg cohort re-key on the RING
+  # wire (--quantize 8 + --dp-clip: the rekey mask correction runs mod 2^b).
+  # buffer_k is pinned to m' = ceil(1.5*8) = 12 (wait-for-cohort) because
+  # cohort-atomic folds at a k-th-arrival clock need >=4 rounds AND a
+  # full-cohort flush threshold to complete any fold in a smoke-sized run.
+  echo "== bench_scalability smoke (client churn + dropout, ring-masked re-key)"
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_scalability.py \
       --clients 200 --rounds 4 --clients-per-round 8 --days 30 --smoke \
       --mode semi_sync --stragglers lognormal --over-select 1.5 \
-      --buffer-k 12 --secure-agg --churn 0,0.2 --timeout-rounds 1
+      --buffer-k 12 --secure-agg --quantize 8 --dp-clip 1.0 \
+      --churn 0,0.2 --timeout-rounds 1
   # serving smoke: replay a small Poisson trace through the padded-bucket
   # engine with cluster routing + a mid-replay hot-swap; asserts zero
   # steady-state recompiles (jit-cache probe) on fp32 AND int8 weights.

@@ -150,6 +150,28 @@ def test_masked_equals_clear_under_dropout_rekey(monkeypatch):
                                rtol=1e-4, atol=1e-6)
 
 
+def test_ring_masked_equals_clear_under_dropout_rekey(monkeypatch):
+    """The ISSUE 10 ring pin under churn: with quantize+mask the re-key
+    mask correction runs in the integer ring mod 2^b
+    (``delta - old + new`` wrapped), so the masked run is BIT-identical —
+    not float-close — to the ring-clear run on the same event schedule,
+    with the recovery path exercised (rekeys > 0)."""
+    engines = _spy_engines(monkeypatch)
+    ring = dict(CHURN, quantize_bits=8, dp_clip=1.0)
+    series, clear_cfg = _workload(**ring, quantize_ring=True,
+                                  cohort_atomic=True)
+    _, masked_cfg = _workload(**ring, secure_agg=True)
+    r_clear = fedavg.run_federated_training(series, FCFG, clear_cfg)[-1]
+    r_masked = fedavg.run_federated_training(series, FCFG, masked_cfg)[-1]
+    assert engines[-1].async_state.rekeys > 0
+    np.testing.assert_array_equal(r_clear.sim_times, r_masked.sim_times)
+    np.testing.assert_array_equal(r_clear.loss_history,
+                                  r_masked.loss_history)
+    assert np.isfinite(r_clear.loss_history).any()
+    jax.tree.map(np.testing.assert_array_equal, r_clear.params,
+                 r_masked.params)
+
+
 def test_membership_churn_excludes_absent_clients():
     series, flcfg = _workload(mode="semi_sync", absent_prob=0.3, rounds=4,
                               stragglers="lognormal", straggler_jitter=1.0,
@@ -237,6 +259,29 @@ def test_kill_and_resume_bit_identical(tmp_path):
                                       resumed[cid].sim_times)
         np.testing.assert_array_equal(full[cid].eps_history,
                                       resumed[cid].eps_history)
+        jax.tree.map(np.testing.assert_array_equal, full[cid].params,
+                     resumed[cid].params)
+        assert full[cid].privacy == resumed[cid].privacy
+
+
+def test_ring_kill_and_resume_bit_identical(tmp_path):
+    """Same acceptance pin with the RING wire on (quantize 8 + masking):
+    the checkpoint round-trips the per-cohort ring metadata (cohort base
+    weights W0) that the host-side ring decode needs, so the resumed run
+    still lands bit-identical through late ring folds and re-keys."""
+    series, flcfg = _workload(**dict(RESUME, quantize_bits=8))
+    full = fedavg.run_federated_training(series, FCFG, flcfg)
+    ck = tmp_path / "ring_ck"
+    fedavg.run_federated_training(series, FCFG, flcfg, checkpoint_path=ck,
+                                  stop_after_rounds=8)
+    resumed = fedavg.run_federated_training(series, FCFG, flcfg,
+                                            checkpoint_path=ck)
+    assert sorted(resumed) == sorted(full)
+    for cid in full:
+        np.testing.assert_array_equal(full[cid].loss_history,
+                                      resumed[cid].loss_history)
+        np.testing.assert_array_equal(full[cid].sim_times,
+                                      resumed[cid].sim_times)
         jax.tree.map(np.testing.assert_array_equal, full[cid].params,
                      resumed[cid].params)
         assert full[cid].privacy == resumed[cid].privacy

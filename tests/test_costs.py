@@ -4,8 +4,9 @@ The acceptance pins of the static wire audit:
 
 * the quantize-on config PROVES int8-grid + fp32-scale uploads on every
   traced execution path (vmap, flat 8-device, hier 2x4, semi-sync);
-* the secure-agg masked-fp32 regression is reported as a TRACKED divergence
-  (non-fatal, byte-exact) against ``latency.payload_bytes``;
+* the quantize+mask config proves the SAME int8+scale wire end-to-end —
+  ring masking holds the quantized format under secure aggregation, and a
+  re-widened masked upload is the FATAL ``masked_fp32_regression``;
 * the committed baseline gate FAILS on an injected wire-byte change;
 * the audited byte counts actually reach the latency model
   (``payload_bytes(audited_bytes=...)`` / ``link_budget(audited_up=...)``).
@@ -83,19 +84,39 @@ def test_quantize_audited_bytes_and_scale_divergence():
     assert d["fatal"] is False
 
 
-def test_masked_fp32_regression_is_tracked_nonfatal():
+def test_masked_upload_proves_int8_wire_end_to_end():
+    """THE tentpole pin: quantize+mask ships the SAME int8+scale wire as
+    quantize alone — ring masking adds zero bytes, the audited masked
+    upload equals the quantized one, and no masked_fp32_regression
+    divergence exists anywhere in the audit."""
     a = costs.audit_round("vmap", T_Q8, SECURE, FCFG)
+    clear = costs.audit_round("vmap", T_Q8, None, FCFG)
     assert a["proved"]
-    assert a["wire"] == "float32"              # mask re-widens the upload
-    n = FCFG.num_params()
-    assert a["upload_bytes_per_client"] == 4 * n
-    assert a["modeled_bytes_per_client"] == 4 * n       # engine charges fp32
-    kinds = {d["kind"]: d for d in a["divergences"]}
-    reg = kinds["masked_fp32_regression"]
-    assert reg["fatal"] is False
-    assert reg["bytes"] == 4 * n - (n + 4 * 5)
-    # the regression never fails the proof-level check
+    assert a["wire"] == "int8+scale"
+    assert a["upload_bytes_per_client"] == clear["upload_bytes_per_client"]
+    assert a["modeled_bytes_per_client"] == clear["modeled_bytes_per_client"]
+    tainted = [c for c in a["crossings"] if c["tainted"]]
+    assert tainted and all(c["wire"] == "int8+scale" for c in tainted)
+    assert not any(d["kind"] == "masked_fp32_regression"
+                   for d in a["divergences"])
     assert costs.check_report({"audits": {"vmap/quantize8_secure": a}}) == []
+
+
+@needs_8_devices
+@pytest.mark.parametrize("path", ["flat8", "hier2x4", "semi_sync"])
+def test_masked_wire_proved_on_every_path(path):
+    a = costs.audit_round(path, T_Q8, SECURE, FCFG)
+    assert a["proved"]
+    assert a["wire"] == "int8+scale"
+
+
+def test_rewidened_masker_is_fatal_regression():
+    """A masker that re-widens the masked upload to fp32 (the pre-ring
+    behaviour) must now FAIL the proof-level check, by name."""
+    a = costs.audit_round("vmap", T_Q8, SECURE, FCFG)
+    broken = dict(a, wire="float32")
+    fatal = costs.check_report({"audits": {"vmap/quantize8_secure": broken}})
+    assert fatal and "masked_fp32_regression" in fatal[0]
 
 
 def test_fp32_config_audited_matches_model():

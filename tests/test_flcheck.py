@@ -174,8 +174,11 @@ def test_cli_list_rules_covers_catalog(capsys):
 
 
 # --------------------------------------------------------- level-1: taint
+# int8: the ring quantizer under masking reserves cohort-size rounding
+# headroom, and the 8-device flat/hier traces dispatch a cohort of 8 —
+# too big for an int4 ring (2^3 - 1 - 8 < 1), fine in int8 (119 levels)
 FULL_T = TransformConfig(clip_norm=1.0, noise_multiplier=0.5,
-                         quantize_bits=4)
+                         quantize_bits=8)
 SECURE = SecureAggConfig(enabled=True)
 
 

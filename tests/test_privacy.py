@@ -105,9 +105,11 @@ def test_cohort_stack_requires_context():
 
 # ------------------------------------------------------- mask cancellation
 def test_pairwise_masks_cancel_in_weighted_sum_with_pads():
-    """The core secure-agg property: per-client uploads are heavily masked,
-    pads (w=0) are excluded from the mask cohort, and the WEIGHTED sum of
-    masked uploads equals the clear one to float tolerance."""
+    """The core secure-agg property: each upload is the client's WEIGHTED
+    contribution under a full-strength mask (never a 1/w_i-scaled one —
+    upload secrecy must not depend on the weight), pads (w=0) are excluded
+    from the mask cohort, and the UNWEIGHTED sum of masked uploads equals
+    the clear weighted sum to float tolerance."""
     rng = np.random.default_rng(0)
     m = 6
     deltas = random_deltas(rng, m)
@@ -116,17 +118,27 @@ def test_pairwise_masks_cancel_in_weighted_sum_with_pads():
     masked = fedavg.apply_stack(masked_stack(), deltas, keys, w_full=w,
                                 round_key=jax.random.PRNGKey(7))
     real, pads = np.asarray([0, 1, 3, 4]), np.asarray([2, 5])
+    wcol = np.asarray(w)
+    mask_rows = []
     for k in deltas:
-        diff = np.asarray(masked[k] - deltas[k])
-        # each real upload is dominated by the mask (looks like noise) ...
-        assert np.abs(diff[real]).mean() > 0.5
-        # ... and pads — cycled DUPLICATES of real clients — upload ZERO:
-        # they can't join the mask cohort, and sending their delta in the
+        wk = wcol.reshape((-1,) + (1,) * (deltas[k].ndim - 1))
+        mask_part = np.asarray(masked[k]) - wk * np.asarray(deltas[k])
+        mask_rows.append(mask_part.reshape(m, -1))
+        # pads — cycled DUPLICATES of real clients — upload ZERO: they
+        # can't join the mask cohort, and sending their delta in the
         # clear would leak the duplicated client's update
         np.testing.assert_array_equal(np.asarray(masked[k])[pads], 0.0)
-    sums_m, wsum_m = fedavg._weighted_sums(masked, w)
-    sums_c, wsum_c = fedavg._weighted_sums(deltas, w)
-    assert float(wsum_m) == float(wsum_c)
+    # every real upload carries the same full-strength mask scale,
+    # REGARDLESS of its weight (w from 1 to 7): with 3 real partners and
+    # mask_std = 4 the per-coordinate mask sigma is 4*sqrt(3) for every
+    # client — a 1/w_i- (or w_i-) scaled mask would fall far outside
+    sigma = 4.0 * math.sqrt(3.0)
+    rms = np.sqrt((np.concatenate(mask_rows, axis=1)[real] ** 2).mean(axis=1))
+    assert np.all(rms > 0.6 * sigma) and np.all(rms < 1.6 * sigma)
+    # uploads are pre-weighted: their UNWEIGHTED sum is the clear weighted
+    # numerator (this is what the aggregator divides by sum(w))
+    sums_m = jax.tree.map(lambda d: jnp.sum(d, axis=0), masked)
+    sums_c, _ = fedavg._weighted_sums(deltas, w)
     tree_close(sums_m, sums_c, rtol=1e-4, atol=1e-4)
 
 
@@ -151,16 +163,19 @@ def test_pair_masks_are_antisymmetric_and_replayable():
 
 
 def test_masking_composes_with_dp_stack_unchanged_streams():
-    """Adding the masker must not shift the clip/noise/quantize PRNG
-    streams (stable per-kind tags): masked minus clear equals the pure
-    mask."""
+    """Adding the masker must not shift the clip/noise PRNG streams (stable
+    per-kind tags): with unit weights, masked minus clear equals the pure
+    mask.  (Quantize is exercised separately by the ring battery — with
+    quantize on, masking switches the quantizer to the shared ring grid,
+    which is a deliberate change of the quantize output, not a stream
+    shift.)"""
     rng = np.random.default_rng(1)
     m = 4
     deltas = random_deltas(rng, m, scale=0.01)
     w = jnp.ones((m,), jnp.float32)
     rk = jax.random.PRNGKey(11)
     keys = jax.vmap(jax.random.fold_in, (None, 0))(rk, jnp.arange(m))
-    tcfg = TransformConfig(noise_multiplier=0.5, quantize_bits=8)
+    tcfg = TransformConfig(clip_norm=1.0, noise_multiplier=0.5)
     clear = fedavg.apply_stack(transforms.make_stack(tcfg), deltas, keys)
     masked = fedavg.apply_stack(
         transforms.make_stack(tcfg, SecureAggConfig(enabled=True,
@@ -442,6 +457,267 @@ def test_training_surfaces_running_epsilon():
                                             FLConfig(**kw))[-1]
     assert not res_off.privacy["enabled"]
     assert np.all(np.isinf(res_off.eps_history))
+
+
+# ------------------------------------- ring masking battery (ISSUE 10)
+def tree_equal(a, b):
+    """BIT-level equality — the ring pins, not float tolerance."""
+    jax.tree.map(lambda u, v: np.testing.assert_array_equal(
+        np.asarray(u), np.asarray(v)), a, b)
+
+
+RING_KW = dict(n_clients=4, clients_per_round=4, rounds=2, n_clusters=0,
+               loss="mse", lr=0.05, dp_clip=1.0, quantize_bits=8,
+               server_opt="fedavg_weighted")
+
+
+def _ring_engines(kw, mesh=None):
+    """Masked engine vs its CLEAR comparator: same shared-grid ring
+    quantizer (``quantize_ring``), no masks."""
+    e_clear = fedavg.RoundEngine(
+        FCFG, FLConfig(**kw, quantize_ring=True), loss=LOSS, mesh=mesh)
+    e_mask = fedavg.RoundEngine(
+        FCFG, FLConfig(**kw, secure_agg=True), loss=LOSS, mesh=mesh)
+    return e_clear, e_mask
+
+
+def test_make_stack_rings_quantizer_under_masking():
+    """quantize+mask switches the quantizer to the shared ring grid and the
+    masker to ring mode; quantize_ring alone is the clear comparator; mask
+    without quantize stays float."""
+    stack = transforms.make_stack(
+        TransformConfig(clip_norm=1.0, quantize_bits=8),
+        SecureAggConfig(enabled=True))
+    assert stack.ring_spec == (8, 1.0)
+    assert stack.pre_weighted
+    q, masker = stack.transforms[-2], stack.transforms[-1]
+    assert isinstance(q, transforms.StochasticQuantize) and q.ring
+    assert isinstance(masker, secure_agg.PairwiseMasker)
+    assert masker.bits == 8
+    clear = transforms.make_stack(
+        TransformConfig(clip_norm=1.0, quantize_bits=8, quantize_ring=True))
+    assert clear.ring_spec == (8, 1.0)
+    assert clear.needs_cohort and clear.pre_weighted
+    fstack = transforms.make_stack(TransformConfig(),
+                                   SecureAggConfig(enabled=True))
+    assert fstack.ring_spec is None and fstack.transforms[-1].bits == 0
+    # the flat facade knob reaches the transform view
+    assert FLConfig(quantize_bits=8,
+                    quantize_ring=True).transform.quantize_ring
+    with pytest.raises(ValueError, match="ring"):
+        FLConfig(quantize_ring=True)                 # needs quantize_bits
+
+
+def test_ring_levels_reserve_rounding_headroom():
+    assert transforms.ring_levels(8, 4) == 2 ** 7 - 1 - 4
+    assert transforms.ring_scale(8, 2.0, 4) == 2.0 / (2 ** 7 - 1 - 4)
+    with pytest.raises(ValueError, match="ring"):
+        transforms.ring_levels(8, 127)               # cohort too big for b=8
+
+
+def test_masked_round_equals_clear_bitwise_vmap(fl_data):
+    """THE tentpole pin, vmap path: ring-masked == ring-clear EXACTLY (mask
+    cancellation is integer ring arithmetic, not float cancellation)."""
+    params, x, y, bidx = fl_data
+    e_clear, e_mask = _ring_engines(RING_KW)
+    counts = np.asarray([17.0, 5.0, 29.0, 11.0], np.float32)
+    s0 = server_opt.init_server_state(params)
+    p_c, _, l_c = e_clear.step(params, s0, x, y, bidx, counts, round_idx=0)
+    p_m, _, l_m = e_mask.step(params, s0, x, y, bidx, counts, round_idx=0)
+    np.testing.assert_array_equal(np.asarray(l_c), np.asarray(l_m))
+    tree_equal(p_c, p_m)
+    # and the masked uploads really are ring noise, not the clear ints
+    from repro.core.async_engine import client_deltas
+    rk = e_mask.base_round_key(0, 0)
+    keys = e_mask.round_keys(0, 4)
+    d_m, _ = client_deltas(params, x, y, bidx, keys, jnp.float32(0.05),
+                           jnp.float32(0.0), FCFG, LOSS, e_mask.transform,
+                           "jnp", e_mask.secure, rk, jnp.asarray(counts))
+    d_c, _ = client_deltas(params, x, y, bidx, keys, jnp.float32(0.05),
+                           jnp.float32(0.0), FCFG, LOSS, e_clear.transform,
+                           "jnp", None, rk, jnp.asarray(counts))
+    assert tree_max_abs_diff(d_m, d_c) > 8.0         # masked ≠ clear grid
+    for leaf in jax.tree.leaves(d_m):                # b-bit ring symbols
+        v = np.asarray(leaf)
+        np.testing.assert_array_equal(v, np.round(v))
+        assert v.min() >= -128 and v.max() < 128
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 virtual devices (run via ./test.sh)")
+@pytest.mark.parametrize("agg_kw,mesh_shape,axes", [
+    (dict(), (8,), ("clients",)),
+    (dict(aggregation="hierarchical", n_regions=2), (2, 4),
+     ("region", "clients")),
+])
+def test_masked_equals_clear_bitwise_on_mesh(fl_data, agg_kw, mesh_shape,
+                                             axes):
+    """Ring pin on the flat 8-device and hier 2x4 reductions, with weight-0
+    mesh pads in the cohort: still EXACT equality."""
+    params, x, y, bidx = fl_data
+    mesh = jax.make_mesh(mesh_shape, axes)
+    kw = dict(RING_KW, clients_per_round=8, **agg_kw)
+    e_clear, e_mask = _ring_engines(kw, mesh=mesh)
+    idx = np.resize(np.arange(4), 8)
+    counts = np.full(8, float(x.shape[1]), np.float32)
+    counts[4:] = 0.0                                 # mesh pads
+    s0 = server_opt.init_server_state(params)
+    args = (params, s0, x[idx], y[idx], bidx[idx], counts)
+    p_c, _, l_c = e_clear.step(*args, round_idx=0)
+    p_m, _, l_m = e_mask.step(*args, round_idx=0)
+    np.testing.assert_array_equal(np.asarray(l_c), np.asarray(l_m))
+    tree_equal(p_c, p_m)
+
+
+def test_ring_masked_semi_sync_late_folds_bitwise():
+    """Cohort-atomic semi-sync with LATE folds: the host-side per-cohort
+    ring decode makes masked == clear exact, empty flushes and all."""
+    series = synthetic.generate_buildings("CA", list(range(6)), days=20)
+    base = dict(n_clients=6, clients_per_round=4, rounds=6, n_clusters=0,
+                batch_size=16, lr=0.05, loss="ew_mse", seed=0,
+                mode="semi_sync", over_select=1.5, buffer_k=4,
+                staleness_alpha=0.5, stragglers="lognormal",
+                straggler_jitter=1.0, dp_clip=1.0, quantize_bits=8)
+    r_clear = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**base, quantize_ring=True,
+                               cohort_atomic=True))[-1]
+    r_mask = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**base, secure_agg=True))[-1]
+    np.testing.assert_array_equal(r_clear.sim_times, r_mask.sim_times)
+    np.testing.assert_array_equal(r_clear.loss_history, r_mask.loss_history)
+    assert np.isfinite(r_clear.loss_history).any()
+    tree_equal(r_clear.params, r_mask.params)
+
+
+def test_ring_wraparound_heavy_masks_cancel_exactly():
+    """Grid values at the very edge of the int8 ring (±127) under uniform
+    masks: individual uploads wrap constantly, yet the ring-reduced sum of
+    masked uploads equals the ring-reduced clear sum BIT-exactly."""
+    m, bits = 5, 8
+    rng = np.random.default_rng(3)
+    edge = rng.choice([-127.0, -126.0, 126.0, 127.0], size=(m, 257))
+    q = {"w": jnp.asarray(edge, jnp.float32),
+         "b": jnp.asarray(rng.integers(-127, 128, (m, 9)), jnp.float32)}
+    stack = transforms.TransformStack(
+        (secure_agg.PairwiseMasker(bits=bits),))
+    w = jnp.ones((m,), jnp.float32)
+    rk = jax.random.PRNGKey(9)
+    keys = jnp.zeros((m, 2), jnp.uint32)
+    v = fedavg.apply_stack(stack, q, keys, w_full=w, round_key=rk)
+    # wraparound is actually exercised: masked ≠ clear + const
+    assert tree_max_abs_diff(v, q) > 128
+    for k in q:
+        s_mask = transforms.ring_wrap(jnp.sum(v[k], axis=0), bits)
+        s_clear = transforms.ring_wrap(jnp.sum(q[k], axis=0), bits)
+        np.testing.assert_array_equal(np.asarray(s_mask),
+                                      np.asarray(s_clear))
+
+
+def test_masked_single_upload_uniform_over_ring():
+    """One client's masked upload is uniform over the int8 ring: under a
+    fixed seed, every one of the 256 ring values occurs with frequency
+    close to n/256 (information-theoretic hiding, not just noise)."""
+    n = 1 << 15
+    masker = secure_agg.PairwiseMasker(bits=8)
+    q = {"w": jnp.full((n,), 37.0, jnp.float32)}     # constant secret
+    ctx = secure_agg.CohortContext(jnp.int32(0),
+                                   jnp.ones((2,), jnp.float32),
+                                   jax.random.PRNGKey(123))
+    v = np.asarray(masker(q, jax.random.PRNGKey(0), ctx)["w"])
+    assert v.min() >= -128 and v.max() < 128
+    counts = np.bincount(v.astype(np.int64) + 128, minlength=256)
+    expected = n / 256
+    assert counts.min() > 0.5 * expected             # every value occurs,
+    assert counts.max() < 2.0 * expected             # none dominates
+    # and the constant secret is invisible: the mode is not 37
+    spread = counts.std() / expected
+    assert spread < 0.2
+
+
+# ----------------------------------- secure-agg-aware central accounting
+def _ref_eps(q, z, T, delta, orders):
+    """Fully independent epsilon: direct binomial sums + direct CKS
+    conversion (no shared code with core/privacy.py)."""
+    def rdp(a):
+        s = sum(math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+                * math.exp(k * (k - 1) / (2 * z * z))
+                for k in range(a + 1))
+        return math.log(s) / (a - 1)
+    return max(0.0, min(
+        T * rdp(a) + math.log1p(-1 / a)
+        - (math.log(delta) + math.log(a)) / (a - 1) for a in orders))
+
+
+def test_secure_agg_accountant_pinned_against_reference():
+    """Acceptance pin: the central-DP epsilon equals the independent
+    reference at the aggregate multiplier z*sqrt(cohort)."""
+    orders = tuple(range(2, 33))
+    q, z, cohort, T = 0.25, 0.8, 16, 40
+    acct = privacy.secure_agg_accountant(
+        TransformConfig(clip_norm=1.0, noise_multiplier=z),
+        PrivacyConfig(delta=1e-5, orders=orders), q,
+        secure_enabled=True, cohort=cohort)
+    acct.step(T)
+    assert acct.active and acct.mode == "central:secure-agg"
+    assert acct.noise_multiplier == pytest.approx(z * math.sqrt(cohort))
+    assert acct.epsilon() == pytest.approx(
+        _ref_eps(q, z * math.sqrt(cohort), T, 1e-5, orders), rel=1e-9)
+
+
+def test_secure_agg_epsilon_tighter_and_monotone():
+    tc = TransformConfig(clip_norm=1.0, noise_multiplier=0.7)
+    pc = PrivacyConfig()
+    per = privacy.make_accountant(tc, pc, 0.2)
+    per.step(30)
+    cen = privacy.secure_agg_accountant(tc, pc, 0.2, secure_enabled=True,
+                                        cohort=8)
+    cen.step(30)
+    # strictly tighter than the per-client bound at matched noise
+    assert cen.epsilon() < per.epsilon()
+    assert np.isfinite(cen.epsilon()) and cen.epsilon() > 0
+    # monotone in rounds
+    run = privacy.secure_agg_accountant(tc, pc, 0.2, secure_enabled=True,
+                                        cohort=8)
+    eps = []
+    for _ in range(10):
+        run.step()
+        eps.append(run.epsilon())
+    assert all(b > a for a, b in zip(eps, eps[1:]))
+
+
+def test_secure_agg_accountant_disabled_when_masking_off():
+    acct = privacy.secure_agg_accountant(
+        TransformConfig(clip_norm=1.0, noise_multiplier=1.0),
+        PrivacyConfig(), 0.5, secure_enabled=False, cohort=4)
+    acct.step(10)
+    assert not acct.active
+    assert acct.epsilon() == math.inf
+    rep = acct.report()
+    assert rep["mode"] == "central:secure-agg"
+    assert "secure aggregation is off" in rep["disabled_reason"]
+    assert "disabled" in privacy.format_report(rep)
+
+
+def test_training_surfaces_central_mode_under_masking():
+    """FLResult.privacy carries the central mode when masking is on, with
+    epsilon = the aggregate-Gaussian composition (z*sqrt(m') on q=m'/N),
+    strictly tighter than the per-client run at matched noise."""
+    series = synthetic.generate_buildings("CA", list(range(6)), days=20)
+    kw = dict(n_clients=6, clients_per_round=3, rounds=4, n_clusters=0,
+              batch_size=16, lr=0.05, loss="ew_mse", seed=0,
+              dp_clip=1.0, dp_noise=1.0)
+    res = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**kw, secure_agg=True))[-1]
+    assert res.privacy["mode"] == "central:secure-agg"
+    assert res.privacy["enabled"]
+    ref = privacy.PrivacyAccountant(1.0 * math.sqrt(3), 0.5,
+                                    res.privacy["delta"])
+    ref.step(4)
+    assert res.privacy["epsilon"] == pytest.approx(ref.epsilon())
+    res_pc = fedavg.run_federated_training(series, FCFG,
+                                           FLConfig(**kw))[-1]
+    assert res_pc.privacy["mode"] == "per-client"
+    assert res.privacy["epsilon"] < res_pc.privacy["epsilon"]
 
 
 def test_semi_sync_accounts_one_invocation_per_dispatch():
