@@ -70,8 +70,9 @@ def main():
                     help="pairwise-masked uploads whose masks cancel in the "
                          "aggregate; with --quantize the masks live in the "
                          "quantizer's integer ring (int-b wire, uniform "
-                         "masked uploads) and the accountant switches to "
-                         "central secure-agg mode (docs/privacy.md)")
+                         "masked uploads) and, under uniform aggregation, "
+                         "the accountant switches to central secure-agg "
+                         "mode (docs/privacy.md)")
     ap.add_argument("--mask-std", type=float, default=1.0,
                     help="per-pair secure-agg mask scale (float path only: "
                          "ring masks are uniform over the ring)")

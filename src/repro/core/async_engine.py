@@ -458,6 +458,12 @@ def _handle_timeouts(engine, round_idx: int, stream: int) -> None:
         ss.cohort_w[r] = w_new
         ss.cohort_gen[r] = gen + 1
         ss.rekeys += 1
+        if engine.accountant is not None:
+            # the re-keyed fold will carry only the survivors' noise
+            # draws: shrink the central accountant's cohort (it keeps the
+            # min over the run and re-prices retroactively — conservative;
+            # no-op for per-client accounting)
+            engine.accountant.observe_cohort(len(survivors))
     ss._sweep()
 
 
@@ -615,12 +621,12 @@ def semi_sync_step(engine, params, state, x, y, batch_idx, weights,
         # cancellation), rescale through its grid (scale * W0 recovers
         # sum(w_i * delta_i)), apply the cohort's shared staleness discount,
         # then divide by the usual discounted weight sum
-        bits, sensitivity = ring
+        bits, sensitivity, headroom = ring
         num = jax.tree.map(lambda g: np.zeros_like(np.asarray(g)), params)
         for r in sorted(cohort_meta):
             members = [p for p in arrived if p.dispatch_round == r]
             m_r, w0_r = cohort_meta[r]
-            s_r = transforms_mod.ring_scale(bits, sensitivity, m_r)
+            s_r = transforms_mod.ring_scale(bits, sensitivity, m_r, headroom)
             d_r = float(staleness_discount(round_idx - r,
                                            acfg.staleness_alpha))
             coef = np.float32(d_r * s_r * w0_r)

@@ -281,9 +281,10 @@ def _pipeline_body(params, x, y, batch_idx, weights, keys, lr, prox_mu, *,
             wsum = agg.reduce(jnp.sum(weights))
             ring = stack.ring_spec
             if ring is not None:
-                bits, sensitivity = ring
+                bits, sensitivity, headroom = ring
                 scale = transforms_mod.ring_scale(bits, sensitivity,
-                                                  w_cohort.shape[0])
+                                                  w_cohort.shape[0],
+                                                  headroom)
                 w_agg = jax.tree.map(
                     lambda g, s: g + scale * transforms_mod.ring_wrap(
                         agg.reduce(s), bits),
@@ -549,19 +550,33 @@ class RoundEngine:
         Called by the driver per cluster; ``engine.step`` composes one
         mechanism invocation per dispatch/flush.
 
-        With secure aggregation on, the server's view is the MASKED SUM,
-        so the secure-agg-aware central-DP accountant applies (aggregate
-        Gaussian ``z_eff = z * sqrt(cohort)`` — ``privacy.
-        secure_agg_accountant``); without masking, per-client accounting.
+        Central (``central:secure-agg``) accounting of the masked sum
+        (aggregate Gaussian ``z_eff = z * sqrt(cohort)`` — ``privacy.
+        secure_agg_accountant``) applies only when the protocol really
+        reduces the server's view to the uniform cohort sum: RING masking
+        (information-theoretically hiding; float Gaussian masks are not)
+        AND uniform aggregation (a weighted sum concentrates sensitivity
+        on heavy clients faster than it concentrates noise).  Otherwise
+        the engine falls back to per-client accounting — sound, since the
+        per-client multiplier never depended on the sum — and surfaces the
+        reason as ``central_fallback_reason`` in the report.
         """
         q = min(1.0, dispatch_m / max(n_members, 1))
         if self.secure is not None:
-            self.accountant = privacy_mod.secure_agg_accountant(
-                self.transform, self.flcfg.privacy, q,
-                secure_enabled=True, cohort=dispatch_m)
-        else:
+            stack = transforms_mod.make_stack(self.transform, self.secure)
+            gate = privacy_mod.central_gate_reason(
+                ring=stack.ring_spec is not None, weighted=self.weighted)
+            if gate is None:
+                self.accountant = privacy_mod.secure_agg_accountant(
+                    self.transform, self.flcfg.privacy, q,
+                    secure_enabled=True, cohort=dispatch_m)
+                return
             self.accountant = privacy_mod.make_accountant(
                 self.transform, self.flcfg.privacy, q)
+            self.accountant.central_fallback_reason = gate
+            return
+        self.accountant = privacy_mod.make_accountant(
+            self.transform, self.flcfg.privacy, q)
 
     def step(self, params, state, x, y, batch_idx, weights,
              round_idx: int = 0, stream: int = 0):
@@ -581,7 +596,12 @@ class RoundEngine:
         """
         if self.accountant is not None:
             # one dispatch = one subsampled-Gaussian invocation (each
-            # semi-sync step dispatches one cohort and flushes once)
+            # semi-sync step dispatches one cohort and flushes once).  The
+            # central accountant prices the sum at the REAL client count —
+            # pads and absent members contribute no noise draw (no-op for
+            # per-client accountants)
+            self.accountant.observe_cohort(
+                int((np.asarray(weights) > 0).sum()))
             self.accountant.step()
         if self.async_cfg.mode == "semi_sync":
             from repro.core import async_engine
@@ -799,6 +819,11 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
                 "it or pass resume=False")
 
     results: Dict[int, FLResult] = {}
+    # finished clusters' accountant states: the central accountant's min
+    # observed cohort is run history (churn re-keys), not derivable from
+    # the configs, so resume must restore it rather than recompose from
+    # the round count alone
+    done_acct: Dict[int, Dict] = {}
     executed = 0
 
     def _save(cid, params, sstate, hist, sim_hist, eps_hist, t_done):
@@ -825,6 +850,8 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
                 "done": [int(dc) for dc in results],
                 "rng": rng.bit_generator.state,
                 "accountant": engine.accountant.state_dict(),
+                "done_accountants": {str(dc): done_acct[dc]
+                                     for dc in results},
                 "n_pending": len(engine.async_state.pending)}
         checkpoint_mod.save(checkpoint_path, tree, metadata=meta)
 
@@ -845,10 +872,15 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
         t0 = 0
         if ckpt_meta is not None and int(cid) in ckpt_meta["done"]:
             # finished before the kill: rebuild its result from the snapshot
-            # (privacy report recomposes deterministically from the round
-            # count; centroids/holdout were recomputed above from the seed)
+            # (the privacy report needs the saved accountant state — the
+            # central mode's min observed cohort is run history; pre-churn
+            # checkpoints fall back to recomposing from the round count —
+            # and centroids/holdout were recomputed above from the seed)
             pref = f"done/{cid}/"
-            engine.accountant.load_state({"rounds": flcfg.rounds})
+            engine.accountant.load_state(
+                ckpt_meta.get("done_accountants", {}).get(
+                    str(cid), {"rounds": flcfg.rounds}))
+            done_acct[cid] = engine.accountant.state_dict()
             results[cid] = FLResult(
                 jax.device_get(checkpoint_mod.unflatten_like(
                     params, ckpt_flat, prefix=pref + "params/")),
@@ -937,6 +969,7 @@ def run_federated_training(all_series, fcfg: ForecasterConfig,
                                 sim_times=np.array(sim_hist),
                                 eps_history=np.array(eps_hist),
                                 privacy=engine.accountant.report())
+        done_acct[cid] = engine.accountant.state_dict()
         if stopped:
             break
     return results

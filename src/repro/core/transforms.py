@@ -35,9 +35,11 @@ Knob -> literature map (see PAPERS.md):
     per-leaf data-dependent scale, every cohort member quantizes its
     cohort-normalized weighted contribution ``(w_i / W) * delta_i`` onto
     ONE public grid ``s = sensitivity / levels`` (sensitivity = clip norm,
-    falling back to 1), with ``levels = 2^(b-1) - 1 - M`` reserving ``M``
-    grid steps of stochastic-rounding headroom so the cohort's integer sum
-    provably fits the ring.  The output is the integer grid itself (not a
+    falling back to 1), with
+    ``levels = floor((2^(b-1) - 1 - M) / (1 + 4z))`` reserving ``M`` grid
+    steps of stochastic-rounding headroom plus a 4-sigma margin for the DP
+    noise tail so the cohort's integer sum provably fits the ring without
+    truncating the Gaussian.  The output is the integer grid itself (not a
     dequantized float): the aggregator sums uploads UNWEIGHTED, reduces the
     sum into the ring, and rescales — see ``fedavg._pipeline_body``.
 
@@ -95,28 +97,47 @@ def global_l2_norm(tree: PyTree) -> jax.Array:
 
 
 # ------------------------------------------------------------ ring helpers
-def ring_levels(bits: int, cohort: int) -> int:
-    """Grid levels of the shared ring quantizer: ``2^(bits-1) - 1 - M``.
+# Noise-tail margin of the shared ring grid, in per-coordinate noise
+# standard deviations: a noised contribution is kept un-truncated out to
+# this many sigma (residual clipped mass 2*Phi(-4) ~ 6e-5 per coordinate).
+RING_NOISE_TAIL_SIGMAS: float = 4.0
+
+
+def ring_levels(bits: int, cohort: int, noise_headroom: float = 0.0) -> int:
+    """Grid levels of the shared ring quantizer:
+    ``floor((2^(bits-1) - 1 - M) / (1 + noise_headroom))``.
 
     The ``M`` reserved steps are stochastic-rounding headroom — each cohort
     member's rounding can overshoot its weight share by at most one grid
-    step, so the cohort's integer sum is bounded by ``levels + M`` and the
-    ring decode ``wrap(sum)`` is exact, never an aliased wraparound.
+    step.  ``noise_headroom`` (``RING_NOISE_TAIL_SIGMAS * z`` when the DP
+    noise stage is on, else 0) additionally reserves a multiplicative
+    noise-tail margin: client ``i``'s per-coordinate Gaussian noise has std
+    ``frac_i * z * levels`` grid steps, so its cap grows to
+    ``frac_i * levels * (1 + noise_headroom)`` — signal plus
+    ``RING_NOISE_TAIL_SIGMAS`` sigma of noise.  Without the margin the cap
+    would truncate the noise at ~``1/z`` sigma, biasing the aggregate and
+    voiding the full-std Gaussian premise the DP accountant prices.  The
+    cohort's integer sum stays bounded by
+    ``levels * (1 + noise_headroom) + M <= 2^(bits-1) - 1``, so the ring
+    decode ``wrap(sum)`` is exact, never an aliased wraparound.
     """
-    levels = 2 ** (bits - 1) - 1 - int(cohort)
+    levels = int((2 ** (bits - 1) - 1 - int(cohort))
+                 / (1.0 + float(noise_headroom)))
     if levels < 1:
         raise ValueError(
-            f"dispatch cohort of {cohort} does not fit the int{bits} ring: "
-            f"need cohort <= {2 ** (bits - 1) - 2} so the shared grid "
-            "keeps >= 1 level after rounding headroom")
+            f"dispatch cohort of {cohort} does not fit the int{bits} ring "
+            f"with noise headroom {float(noise_headroom):.3g}: need "
+            f"(2^{bits - 1} - 1 - cohort) / (1 + headroom) >= 1 — widen "
+            "the quantize bits or lower dp_noise")
     return levels
 
 
-def ring_scale(bits: int, sensitivity: float, cohort: int) -> float:
+def ring_scale(bits: int, sensitivity: float, cohort: int,
+               noise_headroom: float = 0.0) -> float:
     """Public grid step of the shared ring quantizer (one float for the
     whole cohort — the +4-byte wire scale field, and the only residual
     metadata a masked upload carries)."""
-    return float(sensitivity) / ring_levels(bits, cohort)
+    return float(sensitivity) / ring_levels(bits, cohort, noise_headroom)
 
 
 def ring_wrap(x, bits: int):
@@ -169,18 +190,23 @@ class StochasticQuantize:
 
     *Ring (``ring=True``, cohort-aware)*: every cohort member quantizes its
     cohort-normalized weighted contribution ``(w_i / W) * x`` onto ONE
-    public grid ``s = sensitivity / ring_levels(bits, M)`` and returns the
-    INTEGER grid values themselves (float32-encoded ints), clipped to this
-    client's weight share ``floor((w_i/W) * levels) + 1`` — the per-client
-    cap that bounds the cohort's integer sum inside the ring.  This is the
-    grid secure-agg masks live on (``core/secure_agg.py``); the aggregator
-    decodes with ``ring_wrap`` + ``ring_scale`` (``fedavg._pipeline_body``).
-    A data-INdependent grid means the wire scale leaks only the configured
-    clip bound, not any client's delta magnitude.
+    public grid ``s = sensitivity / ring_levels(bits, M, noise_headroom)``
+    and returns the INTEGER grid values themselves (float32-encoded ints),
+    clipped to this client's widened weight share
+    ``floor((w_i/W) * levels * (1 + noise_headroom)) + 1`` — the
+    per-client cap that bounds the cohort's integer sum inside the ring
+    while leaving ``RING_NOISE_TAIL_SIGMAS`` sigma of room for the DP
+    noise tail (``noise_headroom = RING_NOISE_TAIL_SIGMAS * z``; see
+    ``ring_levels``).  This is the grid secure-agg masks live on
+    (``core/secure_agg.py``); the aggregator decodes with ``ring_wrap`` +
+    ``ring_scale`` (``fedavg._pipeline_body``).  A data-INdependent grid
+    means the wire scale leaks only the configured clip bound, not any
+    client's delta magnitude.
     """
     bits: int = 8
     ring: bool = False
     sensitivity: float = 1.0           # ring grid bound (clip norm, or 1)
+    noise_headroom: float = 0.0        # ring noise-tail margin (k * z)
     tag: ClassVar[int] = 2             # stable PRNG stream id
 
     @property
@@ -192,11 +218,14 @@ class StochasticQuantize:
         keys = jax.random.split(key, len(leaves))
         out = []
         if self.ring:
-            levels = ring_levels(self.bits, ctx.weights.shape[0])
+            levels = ring_levels(self.bits, ctx.weights.shape[0],
+                                 self.noise_headroom)
             scale = self.sensitivity / levels
             w = ctx.weights
             frac = w[ctx.slot] / jnp.maximum(jnp.sum(w), 1e-30)
-            qmax = jnp.floor(frac * levels) + 1.0
+            # widened cap: weight share plus the reserved noise-tail margin
+            cap = float(levels) * (1.0 + self.noise_headroom)
+            qmax = jnp.floor(frac * cap) + 1.0
             for x, k in zip(leaves, keys):
                 u = jax.random.uniform(k, x.shape)
                 q = jnp.clip(jnp.floor(frac * x / scale + u), -qmax, qmax)
@@ -248,12 +277,14 @@ class TransformStack:
 
     @property
     def ring_spec(self):
-        """``(bits, sensitivity)`` of the shared-grid ring quantizer when
-        the stack carries one, else None — the engine's signal to decode
-        the aggregate with ``ring_wrap``/``ring_scale``."""
+        """``(bits, sensitivity, noise_headroom)`` of the shared-grid ring
+        quantizer when the stack carries one, else None — the engine's
+        signal to decode the aggregate with ``ring_wrap``/``ring_scale``
+        (the decode grid must be sized with the SAME noise headroom the
+        encoder reserved)."""
         for t in self.transforms:
             if isinstance(t, StochasticQuantize) and t.ring:
-                return (t.bits, t.sensitivity)
+                return (t.bits, t.sensitivity, t.noise_headroom)
         return None
 
     @property
@@ -300,9 +331,14 @@ def make_stack(cfg: TransformConfig,
     if cfg.noise_multiplier > 0.0:
         ts.append(GaussianNoise(cfg.noise_multiplier * sensitivity))
     if cfg.quantize_bits:
-        ts.append(StochasticQuantize(cfg.quantize_bits, ring=ring,
-                                     sensitivity=sensitivity if ring
-                                     else 1.0))
+        ts.append(StochasticQuantize(
+            cfg.quantize_bits, ring=ring,
+            sensitivity=sensitivity if ring else 1.0,
+            # ring grids reserve k-sigma of room for the DP noise tail so
+            # the per-client cap does not truncate the Gaussian (which
+            # would bias the sum and void the accountant's premise)
+            noise_headroom=(RING_NOISE_TAIL_SIGMAS * cfg.noise_multiplier
+                            if ring else 0.0)))
     if secure_on:
         from repro.core import secure_agg  # late: secure_agg is a leaf module
         ts.append(secure_agg.make_masker(

@@ -287,6 +287,46 @@ def test_ring_kill_and_resume_bit_identical(tmp_path):
         assert full[cid].privacy == resumed[cid].privacy
 
 
+CENTRAL = dict(mode="semi_sync", over_select=1.5, staleness_alpha=0.5,
+               stragglers="lognormal", straggler_jitter=1.0, rounds=6,
+               n_clusters=2, secure_agg=True, quantize_bits=8,
+               dp_clip=1.0, dp_noise=0.5, dropout_prob=0.3,
+               timeout_rounds=1)
+
+
+def test_central_accounting_shrinks_under_rekey_and_resumes(tmp_path):
+    """A Bonawitz re-key folds a survivor-only sum, so the central
+    accountant (ring masking + uniform aggregation) re-prices the whole
+    run at z*sqrt(min survivors): epsilon is never smaller than the
+    churn-free run's and strictly larger wherever a re-key shrank the
+    cohort.  The shrunk cohort is run history (not derivable from the
+    configs), so kill/resume must restore it per cluster — including
+    already-finished clusters — for bit-identical privacy reports."""
+    series, flcfg = _workload(**CENTRAL)
+    full = fedavg.run_federated_training(series, FCFG, flcfg)
+    _, clean_cfg = _workload(**dict(CENTRAL, dropout_prob=0.0))
+    clean = fedavg.run_federated_training(series, FCFG, clean_cfg)
+    for cid in full:
+        assert full[cid].privacy["mode"] == "central:secure-agg"
+        assert full[cid].privacy["cohort"] <= clean[cid].privacy["cohort"]
+        assert (full[cid].privacy["epsilon"]
+                >= clean[cid].privacy["epsilon"] - 1e-12)
+    assert any(full[cid].privacy["cohort"] < clean[cid].privacy["cohort"]
+               for cid in full)                 # a re-key really shrank one
+    assert any(full[cid].privacy["epsilon"] > clean[cid].privacy["epsilon"]
+               for cid in full)
+    ck = tmp_path / "central_ck"
+    fedavg.run_federated_training(series, FCFG, flcfg, checkpoint_path=ck,
+                                  stop_after_rounds=8)
+    resumed = fedavg.run_federated_training(series, FCFG, flcfg,
+                                            checkpoint_path=ck)
+    assert sorted(resumed) == sorted(full)
+    for cid in full:
+        np.testing.assert_array_equal(full[cid].eps_history,
+                                      resumed[cid].eps_history)
+        assert full[cid].privacy == resumed[cid].privacy
+
+
 def test_resume_rejects_config_mismatch(tmp_path):
     series, flcfg = _workload(mode="semi_sync", rounds=2)
     ck = tmp_path / "ck"

@@ -488,15 +488,22 @@ def test_make_stack_rings_quantizer_under_masking():
     stack = transforms.make_stack(
         TransformConfig(clip_norm=1.0, quantize_bits=8),
         SecureAggConfig(enabled=True))
-    assert stack.ring_spec == (8, 1.0)
+    assert stack.ring_spec == (8, 1.0, 0.0)
     assert stack.pre_weighted
     q, masker = stack.transforms[-2], stack.transforms[-1]
     assert isinstance(q, transforms.StochasticQuantize) and q.ring
     assert isinstance(masker, secure_agg.PairwiseMasker)
     assert masker.bits == 8
+    # DP noise on -> the ring grid reserves a k-sigma noise-tail margin
+    noised = transforms.make_stack(
+        TransformConfig(clip_norm=1.0, noise_multiplier=0.5,
+                        quantize_bits=8),
+        SecureAggConfig(enabled=True))
+    assert noised.ring_spec == (
+        8, 1.0, transforms.RING_NOISE_TAIL_SIGMAS * 0.5)
     clear = transforms.make_stack(
         TransformConfig(clip_norm=1.0, quantize_bits=8, quantize_ring=True))
-    assert clear.ring_spec == (8, 1.0)
+    assert clear.ring_spec == (8, 1.0, 0.0)
     assert clear.needs_cohort and clear.pre_weighted
     fstack = transforms.make_stack(TransformConfig(),
                                    SecureAggConfig(enabled=True))
@@ -513,6 +520,44 @@ def test_ring_levels_reserve_rounding_headroom():
     assert transforms.ring_scale(8, 2.0, 4) == 2.0 / (2 ** 7 - 1 - 4)
     with pytest.raises(ValueError, match="ring"):
         transforms.ring_levels(8, 127)               # cohort too big for b=8
+    # noise headroom divides the levels: the freed grid range is the
+    # k-sigma noise-tail margin, and the sum bound still fits the ring
+    assert transforms.ring_levels(8, 4, noise_headroom=1.0) \
+        == (2 ** 7 - 1 - 4) // 2
+    lv = transforms.ring_levels(8, 4, noise_headroom=4.0)
+    assert lv * (1 + 4.0) + 4 <= 2 ** 7 - 1
+    assert transforms.ring_scale(8, 2.0, 4, 1.0) == 2.0 / (
+        (2 ** 7 - 1 - 4) // 2)
+    with pytest.raises(ValueError, match="ring"):
+        transforms.ring_levels(8, 4, noise_headroom=200.0)  # needs wider bits
+
+
+def test_ring_cap_leaves_noise_tail_untruncated():
+    """With DP noise on, the per-client ring cap must not clip the
+    Gaussian: the noise-headroom grid keeps saturation down at the k-sigma
+    residual, where the headroom-free grid would truncate the noise at
+    ~1 sigma and clip roughly a third of the coordinates — biasing the
+    sum and voiding the accountant's full-std Gaussian premise."""
+    z, m = 1.0, 2
+    rng = np.random.default_rng(0)
+    # stands for the noised clipped delta the stack hands the quantizer:
+    # per-coordinate N(0, (z*C)^2), C = sensitivity = 1
+    x = jnp.asarray(rng.normal(0.0, z, size=(20000,)), jnp.float32)
+    w = jnp.ones((m,), jnp.float32)
+    ctx = secure_agg.CohortContext(jnp.int32(0), w, jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(2)
+
+    def saturated_frac(headroom):
+        q = transforms.StochasticQuantize(8, ring=True, sensitivity=1.0,
+                                          noise_headroom=headroom)
+        out = np.asarray(q([x], key, ctx)[0])
+        levels = transforms.ring_levels(8, m, headroom)
+        cap = np.floor(0.5 * levels * (1.0 + headroom)) + 1.0
+        assert np.abs(out).max() <= cap       # the sum bound always holds
+        return float(np.mean(np.abs(out) >= cap))
+
+    assert saturated_frac(transforms.RING_NOISE_TAIL_SIGMAS * z) < 1e-3
+    assert saturated_frac(0.0) > 0.05         # the bug the margin fixes
 
 
 def test_masked_round_equals_clear_bitwise_vmap(fl_data):
@@ -698,18 +743,95 @@ def test_secure_agg_accountant_disabled_when_masking_off():
     assert "disabled" in privacy.format_report(rep)
 
 
-def test_training_surfaces_central_mode_under_masking():
-    """FLResult.privacy carries the central mode when masking is on, with
-    epsilon = the aggregate-Gaussian composition (z*sqrt(m') on q=m'/N),
-    strictly tighter than the per-client run at matched noise."""
+def test_secure_agg_accountant_gated_on_ring_and_uniform():
+    """Central accounting only prices the RING-masked UNIFORM sum: float
+    masking is not information-theoretically hiding, and a weighted sum
+    concentrates sensitivity on heavy clients faster than noise."""
+    tc = TransformConfig(clip_norm=1.0, noise_multiplier=0.8)
+    pc = PrivacyConfig()
+    flt = privacy.secure_agg_accountant(tc, pc, 0.25, secure_enabled=True,
+                                        cohort=8, ring=False)
+    assert not flt.active and flt.epsilon() == math.inf
+    assert "float masking" in flt.disabled_reason
+    wtd = privacy.secure_agg_accountant(tc, pc, 0.25, secure_enabled=True,
+                                        cohort=8, weighted=True)
+    assert not wtd.active
+    assert "weighted aggregation" in wtd.disabled_reason
+    # a FIXED weight vector admits the exact weighted-sum multiplier
+    # z * sqrt(sum frac^2) / max frac (uniform -> z*sqrt(m); one dominant
+    # client -> z), pinned against the independent reference
+    w = np.asarray([4.0, 1.0, 1.0, 1.0, 1.0])
+    frac = w / w.sum()
+    z_eff = 0.8 * math.sqrt(float(np.sum(frac ** 2))) / float(frac.max())
+    orders = tuple(range(2, 33))
+    fixed = privacy.secure_agg_accountant(
+        tc, PrivacyConfig(orders=orders), 0.25, secure_enabled=True,
+        cohort=5, weighted=True, weights=w)
+    fixed.step(10)
+    assert fixed.active
+    assert fixed.noise_multiplier == pytest.approx(z_eff)
+    assert fixed.epsilon() == pytest.approx(
+        _ref_eps(0.25, z_eff, 10, 1e-5, orders), rel=1e-9)
+    # sanity: the weighted multiplier certifies at least the per-client z
+    # and at most the uniform z*sqrt(m)
+    assert 0.8 <= fixed.noise_multiplier <= 0.8 * math.sqrt(5)
+    uni = privacy.secure_agg_accountant(
+        tc, pc, 0.25, secure_enabled=True, cohort=4, weighted=True,
+        weights=np.asarray([3.0, 3.0, 3.0, 3.0]))
+    assert uni.noise_multiplier == pytest.approx(0.8 * math.sqrt(4))
+
+
+def test_central_accountant_shrinks_to_min_observed_cohort():
+    """observe_cohort re-prices the WHOLE run at z*sqrt(min cohort): a
+    churn re-key folds a survivor-only sum, so the smaller noise applies
+    retroactively (conservative); growing back is ignored, per-client
+    accountants are unaffected, and the min survives a state round-trip."""
+    tc = TransformConfig(clip_norm=1.0, noise_multiplier=0.8)
+    pc = PrivacyConfig(orders=tuple(range(2, 33)))
+    acct = privacy.secure_agg_accountant(tc, pc, 0.25, secure_enabled=True,
+                                         cohort=8)
+    acct.step(5)
+    eps_full = acct.epsilon()
+    acct.observe_cohort(3)
+    assert acct.cohort == 3
+    assert acct.noise_multiplier == pytest.approx(0.8 * math.sqrt(3))
+    assert acct.epsilon() > eps_full
+    ref = privacy.secure_agg_accountant(tc, pc, 0.25, secure_enabled=True,
+                                        cohort=3)
+    ref.step(5)
+    assert acct.epsilon() == pytest.approx(ref.epsilon())
+    acct.observe_cohort(6)                    # never grows back
+    assert acct.cohort == 3
+    # state round-trip carries the min cohort (checkpoint/resume)
+    fresh = privacy.secure_agg_accountant(tc, pc, 0.25, secure_enabled=True,
+                                          cohort=8)
+    fresh.load_state(acct.state_dict())
+    assert fresh.cohort == 3
+    assert fresh.epsilon() == pytest.approx(acct.epsilon())
+    assert acct.report()["cohort"] == 3
+    # per-client accountants have no cohort to shrink
+    per = privacy.make_accountant(tc, pc, 0.25)
+    per.step(5)
+    eps_per = per.epsilon()
+    per.observe_cohort(1)
+    assert per.epsilon() == eps_per and "cohort" not in per.report()
+
+
+def test_training_surfaces_central_mode_under_ring_masking():
+    """FLResult.privacy carries the central mode when RING masking is on
+    (quantize + mask, uniform aggregation), with epsilon = the aggregate-
+    Gaussian composition (z*sqrt(m') on q=m'/N), strictly tighter than the
+    per-client run at matched noise.  Float masking and weighted
+    aggregation fall back to per-client accounting with the reason."""
     series = synthetic.generate_buildings("CA", list(range(6)), days=20)
     kw = dict(n_clients=6, clients_per_round=3, rounds=4, n_clusters=0,
               batch_size=16, lr=0.05, loss="ew_mse", seed=0,
               dp_clip=1.0, dp_noise=1.0)
     res = fedavg.run_federated_training(
-        series, FCFG, FLConfig(**kw, secure_agg=True))[-1]
+        series, FCFG, FLConfig(**kw, secure_agg=True, quantize_bits=8))[-1]
     assert res.privacy["mode"] == "central:secure-agg"
     assert res.privacy["enabled"]
+    assert res.privacy["cohort"] == 3            # full cohort, no churn
     ref = privacy.PrivacyAccountant(1.0 * math.sqrt(3), 0.5,
                                     res.privacy["delta"])
     ref.step(4)
@@ -718,6 +840,19 @@ def test_training_surfaces_central_mode_under_masking():
                                            FLConfig(**kw))[-1]
     assert res_pc.privacy["mode"] == "per-client"
     assert res.privacy["epsilon"] < res_pc.privacy["epsilon"]
+    # float masking (no quantize): masks are not IT-hiding -> per-client
+    res_f = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**kw, secure_agg=True))[-1]
+    assert res_f.privacy["mode"] == "per-client"
+    assert "float masking" in res_f.privacy["central_fallback_reason"]
+    assert res_f.privacy["epsilon"] == pytest.approx(
+        res_pc.privacy["epsilon"])
+    # weighted aggregation under ring masking -> per-client
+    res_w = fedavg.run_federated_training(
+        series, FCFG, FLConfig(**kw, secure_agg=True, quantize_bits=8,
+                               server_opt="fedavg_weighted"))[-1]
+    assert res_w.privacy["mode"] == "per-client"
+    assert "weighted aggregation" in res_w.privacy["central_fallback_reason"]
 
 
 def test_semi_sync_accounts_one_invocation_per_dispatch():
